@@ -1,0 +1,50 @@
+"""Reproduce the paper's evaluation tables/figures from the DiffLight
+simulator and print them as formatted tables.
+
+    PYTHONPATH=src python examples/photonic_report.py
+"""
+import numpy as np
+
+from repro.configs.diffusion import PAPER_MODELS
+from repro.core.photonic.arch import PAPER_OPTIMUM
+from repro.core.photonic.baselines import derive_baselines
+from repro.core.photonic.simulator import ablation, simulate
+from repro.core.photonic.workload import unet_workload
+
+
+def main():
+    ws = {n: unet_workload(c, ctx_len=77 if c.context_dim else None)
+          for n, c in PAPER_MODELS.items()}
+
+    print('=== Fig. 8: normalized energy (lower is better) ===')
+    cols = ['baseline', 'sw_opt', 'pipelined', 'dac_sharing', 'combined']
+    print(f'{"model":16s} ' + ' '.join(f'{c:>12s}' for c in cols))
+    ratios = []
+    for n, w in ws.items():
+        ab = ablation(w)
+        base = ab['baseline'].energy_j
+        print(f'{n:16s} ' + ' '.join(
+            f'{ab[c].energy_j/base:12.3f}' for c in cols))
+        ratios.append(base / ab['combined'].energy_j)
+    print(f'--> average combined reduction: {np.mean(ratios):.2f}x '
+          f'(paper: ~3x)\n')
+
+    reps = {n: simulate(w, PAPER_OPTIMUM) for n, w in ws.items()}
+    gops = float(np.mean([r.gops for r in reps.values()]))
+    epb = float(np.mean([r.epb_pj for r in reps.values()]))
+    print('=== DiffLight (combined config) per model ===')
+    for n, r in reps.items():
+        print(f'{n:16s} {r.gops:8.1f} GOPS  {r.epb_pj:8.4f} pJ/bit  '
+              f'{r.latency_s*1e3:8.2f} ms/step')
+    print()
+    print('=== Figs. 9-10: vs state of the art (anchored to paper ratios,'
+          ' see DESIGN.md) ===')
+    print(f'{"baseline":24s} {"GOPS":>10s} {"EPB pJ/b":>10s} '
+          f'{"GOPS x":>8s} {"EPB x":>8s}')
+    for name, b in derive_baselines(gops, epb).items():
+        print(f'{name:24s} {b.gops:10.2f} {b.epb_pj:10.4f} '
+              f'{gops/b.gops:8.2f} {b.epb_pj/epb:8.2f}')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,64 @@
+"""End-to-end driver (the paper's workload): serve batched image-generation
+requests with a W8A8-quantized diffusion model, reporting throughput and the
+simulated DiffLight energy for the same workload.
+
+    PYTHONPATH=src python examples/serve_diffusion.py --batches 3 --batch 4
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.photonic.simulator import simulate
+from repro.core.photonic.arch import PAPER_OPTIMUM
+from repro.core.photonic.workload import unet_workload
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.models.unet import UNetConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--batch', type=int, default=4)
+    ap.add_argument('--batches', type=int, default=3)
+    ap.add_argument('--steps', type=int, default=8)
+    ap.add_argument('--img', type=int, default=32)
+    ap.add_argument('--fp32', action='store_true',
+                    help='disable W8A8 serving')
+    args = ap.parse_args()
+
+    cfg = UNetConfig('serve-demo', img_size=args.img, in_ch=3, base_ch=64,
+                     ch_mults=(1, 2), n_res_blocks=1,
+                     attn_resolutions=(args.img // 2,), n_heads=4,
+                     timesteps=100)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg,
+                                  quant=not args.fp32)
+    gen = jax.jit(lambda k: pipe.generate(k, batch=args.batch,
+                                          steps=args.steps))
+
+    print(f'[serve] warmup (compile)...')
+    jax.block_until_ready(gen(jax.random.PRNGKey(1)))
+
+    t0 = time.perf_counter()
+    for i in range(args.batches):
+        img = gen(jax.random.PRNGKey(10 + i))
+        jax.block_until_ready(img)
+        assert np.all(np.isfinite(np.asarray(img)))
+        print(f'[serve] batch {i}: {img.shape} '
+              f'range [{float(img.min()):.2f}, {float(img.max()):.2f}]')
+    dt = time.perf_counter() - t0
+    n_img = args.batches * args.batch
+    print(f'[serve] {n_img} images in {dt:.2f}s '
+          f'({n_img/dt:.2f} img/s, W8A8={"off" if args.fp32 else "on"})')
+
+    # what would DiffLight burn on this workload?
+    w = unet_workload(cfg).scale(args.steps * n_img)
+    rep = simulate(w, PAPER_OPTIMUM)
+    print(f'[difflight] same workload on the photonic accelerator: '
+          f'{rep.energy_j*1e3:.1f} mJ, {rep.latency_s*1e3:.1f} ms, '
+          f'{rep.gops:.0f} GOPS, {rep.epb_pj:.3f} pJ/bit')
+
+
+if __name__ == '__main__':
+    main()

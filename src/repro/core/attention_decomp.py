@@ -1,0 +1,54 @@
+"""Attention MatMul decomposition (paper Eq. 6) and scale folding.
+
+DiffLight computes  Q.K^T = Q.(X.W_K)^T = (Q.W_K^T).X^T  so the photonic
+banks never materialize K, and folds the 1/sqrt(d_k) scaling into the weight
+matrix so no separate scaling pass is needed.
+
+On TPU the same rewrite is a compute-reordering choice:
+
+  standard:   K = X W_K        (T x d x d_k MACs), then Q K^T (S x T x d_k)
+  reordered:  Q' = Q W_K^T     (S x d_k x d MACs), then Q' X^T (S x T x d)
+
+FLOPs(standard)  = T*d*d_k + S*T*d_k
+FLOPs(reordered) = S*d_k*d + S*T*d
+The reordering wins when S*d_k*d + S*T*d < T*d*d_k + S*T*d_k, i.e. roughly
+when S << T and d_k < d (cross-attention / decode with short queries).  We
+expose both paths and a cost-based chooser.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fold_scale_into_wq(w_q: jax.Array, d_k: int) -> jax.Array:
+    """Fold 1/sqrt(d_k) into the query projection (always free)."""
+    return w_q * (d_k ** -0.5)
+
+
+def scores_standard(q: jax.Array, x_kv: jax.Array, w_k: jax.Array):
+    """q (..., S, d_k) already projected+scaled; x_kv (..., T, d)."""
+    k = jnp.einsum('...td,dk->...tk', x_kv, w_k)
+    return jnp.einsum('...sk,...tk->...st', q, k)
+
+
+def scores_reordered(q: jax.Array, x_kv: jax.Array, w_k: jax.Array):
+    """Eq. 6: (Q W_K^T) X^T — K is never materialized."""
+    q_prime = jnp.einsum('...sk,dk->...sd', q, w_k)
+    return jnp.einsum('...sd,...td->...st', q_prime, x_kv)
+
+
+def decomp_flops(S: int, T: int, d: int, d_k: int) -> tuple[int, int]:
+    standard = T * d * d_k + S * T * d_k
+    reordered = S * d_k * d + S * T * d
+    return standard, reordered
+
+
+def scores_auto(q: jax.Array, x_kv: jax.Array, w_k: jax.Array):
+    """Pick the cheaper path by static FLOP count (shapes are static under
+    jit, so this resolves at trace time)."""
+    S, d_k = q.shape[-2], q.shape[-1]
+    T, d = x_kv.shape[-2], x_kv.shape[-1]
+    std, reo = decomp_flops(S, T, d, d_k)
+    return scores_reordered(q, x_kv, w_k) if reo < std else \
+        scores_standard(q, x_kv, w_k)

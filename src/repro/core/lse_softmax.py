@@ -1,0 +1,112 @@
+"""Log-sum-exp softmax decomposition (paper Eq. 4) and its streaming form.
+
+DiffLight decomposes softmax into four pipelined sub-operations executed in
+the electronic control unit while attention scores stream out of the ADCs:
+
+  1. track the running maximum gamma_max        (comparator circuit)
+  2. compute ln(sum_j exp(gamma_j - gamma_max)) (LUT exp + accumulate + LUT ln)
+  3. subtract:   gamma_i - gamma_max - ln(...)  (subtractor circuit)
+  4. exponentiate the result                    (LUT exp)
+
+On TPU this *streaming max + LSE accumulation* is exactly the online-softmax
+recurrence of flash attention: process the score vector in blocks, keep
+(m, l) = (running max, running sum of exp), and renormalize.  This module
+holds the decomposition itself plus the blockwise streaming update used by
+``kernels/flash_attention``; the Pallas kernel is the VMEM-tiled version.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def lse_softmax(scores: jax.Array, axis: int = -1) -> jax.Array:
+    """Softmax via the paper's 4-op decomposition.  Numerically identical to
+    jax.nn.softmax (which uses the same stabilization)."""
+    gamma_max = jnp.max(scores, axis=axis, keepdims=True)            # op 1
+    shifted = scores - gamma_max
+    ln_sum = jnp.log(jnp.sum(jnp.exp(shifted), axis=axis,            # op 2
+                             keepdims=True))
+    return jnp.exp(shifted - ln_sum)                                  # ops 3+4
+
+
+class StreamState(NamedTuple):
+    """Running (gamma_max, sum-of-exp, unnormalized accumulator)."""
+    m: jax.Array    # (..., 1) running max
+    l: jax.Array    # (..., 1) running sum of exp(score - m)
+    acc: jax.Array  # (..., d_v) running weighted-value accumulator
+
+
+def stream_init(batch_shape: Tuple[int, ...], d_v: int,
+                dtype=jnp.float32) -> StreamState:
+    return StreamState(
+        m=jnp.full(batch_shape + (1,), NEG_INF, dtype),
+        l=jnp.zeros(batch_shape + (1,), dtype),
+        acc=jnp.zeros(batch_shape + (d_v,), dtype),
+    )
+
+
+def stream_update(state: StreamState, scores_blk: jax.Array,
+                  values_blk: jax.Array) -> StreamState:
+    """One streaming step: fold in a block of scores (..., B) and the matching
+    value rows (..., B, d_v) — value rows broadcast over any extra leading
+    query dims of the scores.  This is the comparator + LUT pipeline of the
+    paper, blockified."""
+    m_blk = jnp.max(scores_blk, axis=-1, keepdims=True)
+    m_new = jnp.maximum(state.m, m_blk)                              # op 1
+    correction = jnp.exp(state.m - m_new)
+    p = jnp.exp(scores_blk - m_new)                                  # op 4 (partial)
+    l_new = state.l * correction + jnp.sum(p, axis=-1, keepdims=True)
+    v = values_blk.astype(p.dtype)
+    if p.ndim == v.ndim:        # p (..., S, B) x v (..., B, d)
+        pv = jnp.matmul(p, v)
+    else:                        # p (..., B)    x v (..., B, d)
+        pv = jnp.einsum('...b,...bd->...d', p, v)
+    acc_new = state.acc * correction + pv
+    return StreamState(m_new, l_new, acc_new)
+
+
+def stream_finalize(state: StreamState) -> jax.Array:
+    """ops 2+3: divide by exp(ln_sum) = l."""
+    return state.acc / jnp.maximum(state.l, 1e-30)
+
+
+def streaming_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                            block: int = 128, causal: bool = False,
+                            scale: float | None = None) -> jax.Array:
+    """Pure-jnp streaming attention over K/V blocks: the oracle for the
+    Pallas flash kernel, and a direct executable rendering of the paper's
+    pipelined softmax.  q (..., S, d), k/v (..., T, d)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    T = k.shape[-2]
+    S = q.shape[-2]
+    pad = (-T) % block
+    if pad:
+        kp = jnp.pad(k, [(0, 0)] * (k.ndim - 2) + [(0, pad), (0, 0)])
+        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 2) + [(0, pad), (0, 0)])
+    else:
+        kp, vp = k, v
+    nblk = kp.shape[-2] // block
+    q32 = q.astype(jnp.float32) * scale
+    state = stream_init(q.shape[:-1], v.shape[-1])
+    kv_pos = jnp.arange(block)
+    q_pos = jnp.arange(S)
+
+    def body(i, state):
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * block, block, axis=-2)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * block, block, axis=-2)
+        s = jnp.einsum('...sd,...td->...st', q32, kb.astype(jnp.float32))
+        col = i * block + kv_pos                      # (block,)
+        mask = col[None, :] < T                       # padding mask
+        if causal:
+            mask = mask & (col[None, :] <= q_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+        return stream_update(state, s, vb)
+
+    state = jax.lax.fori_loop(0, nblk, body, state)
+    return stream_finalize(state).astype(q.dtype)

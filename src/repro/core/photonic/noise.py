@@ -1,0 +1,78 @@
+"""Analog-noise robustness model (paper §VI future work: "mitigating
+fabrication process variations to further improve reliability").
+
+Non-coherent photonic MACs are analog: MR transmission calibration error,
+thermal drift between TO re-tunes, inter-channel crosstalk (bounded by the
+36-MR WDM limit) and PD shot noise all perturb the effective weights and
+partial sums.  We model the aggregate as
+
+    y = (x_q + eps_x) (w_q + eps_w) + eps_pd
+
+with eps_* zero-mean Gaussians expressed in LSBs of the 8-bit datapath, and
+provide (a) a noisy variant of the W8A8 matmul for robustness sweeps and
+(b) the crosstalk-vs-channel-count curve that justifies the paper's
+36-MRs-per-waveguide design point.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, quantize, quantize_per_channel
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    sigma_w_lsb: float = 0.3     # MR calibration + thermal drift (weights)
+    sigma_x_lsb: float = 0.2     # activation modulation error
+    sigma_pd_lsb: float = 0.5    # BPD / shot noise on the accumulated sum
+    crosstalk_db_per_channel: float = -28.0   # adjacent-channel isolation
+
+
+def crosstalk_sigma_lsb(n_channels: int, model: NoiseModel) -> float:
+    """Aggregate crosstalk contribution (in LSBs of the output) of the other
+    n-1 wavelengths on one waveguide.  Grows ~linearly in channel count at
+    fixed isolation — the quantitative reason a waveguide is capped at 36
+    MRs (paper §V, Lumerical analysis)."""
+    leak = 10.0 ** (model.crosstalk_db_per_channel / 10.0)
+    return float(jnp.sqrt(max(n_channels - 1, 0) * leak) * 127.0)
+
+
+def noisy_w8a8_matmul(key, x: jax.Array, w: jax.Array,
+                      model: NoiseModel = NoiseModel(),
+                      n_channels: int = 36) -> jax.Array:
+    """W8A8 matmul with analog perturbations (pure-jnp; used for robustness
+    sweeps, not the serving path)."""
+    kx, kw, kp = jax.random.split(key, 3)
+    xq = quantize(x.reshape(-1, x.shape[-1]), axis=(1,))
+    wq = quantize_per_channel(w)
+    xn = xq.q.astype(jnp.float32) + \
+        model.sigma_x_lsb * jax.random.normal(kx, xq.q.shape)
+    wn = wq.q.astype(jnp.float32) + \
+        model.sigma_w_lsb * jax.random.normal(kw, wq.q.shape)
+    acc = xn @ wn
+    sigma_out = jnp.sqrt(model.sigma_pd_lsb ** 2 +
+                         crosstalk_sigma_lsb(n_channels, model) ** 2)
+    acc = acc + sigma_out * jax.random.normal(kp, acc.shape) * \
+        jnp.sqrt(jnp.asarray(x.shape[-1], jnp.float32))
+    out = acc * xq.scale * wq.scale.reshape(1, -1)
+    return out.reshape(x.shape[:-1] + (w.shape[-1],))
+
+
+def robustness_sweep(key, x: jax.Array, w: jax.Array,
+                     channel_counts=(2, 8, 16, 24, 36, 48, 64),
+                     model: NoiseModel = NoiseModel()):
+    """Relative output error vs WDM channel count: reproduces the shape of
+    the paper's error-free-operation constraint (<=36 channels).  Returns
+    {channels: rel_l2_error}."""
+    exact = x.reshape(-1, x.shape[-1]) @ w
+    out = {}
+    for i, n in enumerate(channel_counts):
+        y = noisy_w8a8_matmul(jax.random.fold_in(key, i), x, w,
+                              model=model, n_channels=n)
+        rel = float(jnp.linalg.norm(y.reshape(exact.shape) - exact) /
+                    jnp.linalg.norm(exact))
+        out[n] = rel
+    return out

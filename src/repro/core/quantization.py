@@ -1,0 +1,123 @@
+"""W8A8 symmetric quantization (paper §V, [28] Q-Diffusion style).
+
+DiffLight imprints 8-bit activations and weights onto MR banks; the balanced
+photodetector accumulates the signed analog sum.  The exact digital semantic
+is an int8 x int8 -> int32 GEMM with symmetric per-channel scales: the MR
+transmission calibration corresponds to the scale factors, the positive /
+negative waveguide rails correspond to the sign of the int8 value.
+
+This module provides the quantize / dequantize machinery and a `QTensor`
+pytree so quantized weights flow through jit / pjit unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    """An int8 tensor with a broadcastable float scale: x ~= q * scale."""
+
+    q: jax.Array      # int8
+    scale: jax.Array  # f32, broadcastable against q
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey('q'), self.q),
+                 (jax.tree_util.GetAttrKey('scale'), self.scale)), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def _absmax_scale(x: jax.Array, axis, eps: float = 1e-8) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, eps) / INT8_MAX
+
+
+def quantize(x: jax.Array, axis: Optional[Tuple[int, ...]] = None) -> QTensor:
+    """Symmetric quantization.
+
+    axis: axes to *reduce* when computing the scale.  ``None`` -> per-tensor.
+    E.g. a weight (in, out) quantized per-output-channel uses ``axis=(0,)``.
+    """
+    if axis is None:
+        axis = tuple(range(x.ndim))
+    scale = _absmax_scale(x.astype(jnp.float32), axis)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -INT8_MAX, INT8_MAX)
+    return QTensor(q.astype(jnp.int8), scale)
+
+
+def quantize_per_channel(w: jax.Array) -> QTensor:
+    """Weight (..., in, out): one scale per output channel — the reduction
+    runs over the contracting (in) dim only, so batched/expert weights get
+    per-(expert, channel) scales."""
+    return quantize(w, axis=(w.ndim - 2,))
+
+
+def fake_quantize(x: jax.Array, axis=None) -> jax.Array:
+    """Quantize-dequantize round trip in the input dtype (for QAT / error
+    measurement)."""
+    return quantize(x, axis=axis).dequantize(x.dtype)
+
+
+def quantization_error(x: jax.Array, axis=None) -> jax.Array:
+    """Relative L2 error of the W8A8 round trip (Table-I quality proxy)."""
+    xq = fake_quantize(x, axis=axis)
+    return jnp.linalg.norm((x - xq).ravel()) / jnp.maximum(
+        jnp.linalg.norm(x.ravel()), 1e-12)
+
+
+def quantize_params(params, min_size: int = 1 << 12):
+    """Serve-time weight quantization (paper C1): every float matmul weight
+    (>= min_size elements, >= 2-D) becomes a QTensor with per-output-channel
+    scales; everything else (norms, biases, embeddings for gather) stays
+    float.  Halves (vs bf16) / quarters (vs f32) the weight bytes a decode
+    step reads from HBM."""
+    def one(path, leaf):
+        name = str(getattr(path[-1], 'key', '')) if path else ''
+        is_weight = name in ('w', 'w_gate', 'w_up', 'w_down')
+        if (is_weight and hasattr(leaf, 'ndim') and leaf.ndim >= 2
+                and leaf.dtype in (jnp.float32, jnp.bfloat16)
+                and leaf.size >= min_size):
+            return quantize_per_channel(leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def w8a8_matmul_ref(x: jax.Array, wq: QTensor,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """Reference W8A8 matmul: dynamic per-row activation quantization,
+    int8 x int8 -> int32 accumulate, rescale.  Mirrors one pass through a
+    DiffLight MR bank pair + BPD column.
+
+    x:  (..., K) float
+    wq: QTensor with q (K, N)
+    """
+    xq = quantize(x, axis=(x.ndim - 1,))  # per-row (per optical 'vector')
+    acc = jax.lax.dot_general(
+        xq.q, wq.q,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * xq.scale * wq.scale.reshape(1, -1)
+            ).astype(out_dtype)

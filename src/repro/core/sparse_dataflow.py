@@ -1,0 +1,122 @@
+"""Sparsity-aware transposed-convolution dataflow (paper §IV-C).
+
+A stride-s transposed convolution first zero-inserts (s-1) zeros between
+input pixels, then runs a dense convolution; (s^2-1)/s^2 of the MACs hit
+inserted zeros.  DiffLight's dataflow detects all-zero columns of the
+flattened input and drops the matching kernel elements.
+
+The exact TPU-native equivalent is the *sub-pixel decomposition*: a stride-s
+ConvTranspose with kernel k equals s^2 independent dense stride-1
+convolutions over the **un-expanded** input — one per output phase
+(oy mod s, ox mod s) — whose outputs are interleaved.  Each phase convolution
+uses exactly the kernel taps that land on non-zero inputs, so the zero-MACs
+are eliminated *structurally* (the same arithmetic the paper saves, but in
+MXU-friendly dense GEMMs instead of MR-bank column-skipping).
+
+Layout: NHWC activations, HWIO kernels (the kernel is the *gradient* /
+fractional-stride orientation used by jax.lax.conv_transpose).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def conv_transpose_dense(x: jax.Array, kernel: jax.Array, stride: int,
+                         padding: str = 'SAME') -> jax.Array:
+    """Reference: XLA's fractional-stride transposed conv (computes against
+    the zero-inserted input — the 'baseline dataflow' of the paper)."""
+    return jax.lax.conv_transpose(
+        x, kernel, (stride, stride), padding,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+
+
+def _phase_taps(kh: int, kw: int, stride: int, phase_y: int, phase_x: int,
+                pad_top: int, pad_left: int):
+    """Static index math: which kernel taps contribute to output phase
+    (phase_y, phase_x), and the input offset they read from.
+
+    Output pixel oy reads zero-inserted row  z = oy + dy - pad_top  for kernel
+    row dy (flipped orientation handled below); z is a real input row iff
+    z % stride == 0.  So for fixed oy % stride == phase_y the contributing dys
+    are { dy : (phase_y + dy - pad_top) % stride == 0 }.
+    """
+    tys = [dy for dy in range(kh) if (phase_y + dy - pad_top) % stride == 0]
+    txs = [dx for dx in range(kw) if (phase_x + dx - pad_left) % stride == 0]
+    return tys, txs
+
+
+def conv_transpose_sparse(x: jax.Array, kernel: jax.Array, stride: int,
+                          padding: str = 'SAME') -> jax.Array:
+    """Zero-skipping transposed conv via sub-pixel decomposition.
+
+    x:      (N, H, W, Cin)
+    kernel: (kh, kw, Cin, Cout)   (conv_transpose / HWIO orientation)
+    Returns (N, H*stride, W*stride, Cout) for SAME padding.
+    Only SAME padding and square stride are supported (the UNet decoder case).
+    """
+    if stride == 1:
+        return conv_transpose_dense(x, kernel, 1, padding)
+    if padding != 'SAME':
+        raise NotImplementedError('sparse dataflow supports SAME padding')
+    N, H, W, Cin = x.shape
+    kh, kw, _, Cout = kernel.shape
+    out_h, out_w = H * stride, W * stride
+    # Match jax.lax.conv_transpose(SAME): it runs conv_general_dilated with
+    # lhs_dilation=s and padding (pad_a, pad_b) where
+    #   pad_a = k-1 if s > k-1 else ceil((k+s-2)/2),  pad_a+pad_b = k+s-2.
+    # Semantics (correlation, no kernel flip):
+    #   out[o] = sum_d ker[d] * x[(o + d - pad_a)/s]   (when divisible, in range)
+    def _pad_a(k, s):
+        return k - 1 if s > k - 1 else -(-(k + s - 2) // 2)
+    pad_top = _pad_a(kh, stride)
+    pad_left = _pad_a(kw, stride)
+    # Per output phase py = o mod s the contributing taps are
+    #   { d : (py + d - pad_a) % s == 0 }, reading input offset
+    #   off_d = (py + d - pad_a) // s  relative to oi = o // s.
+    out = jnp.zeros((N, out_h, out_w, Cout), x.dtype)
+    for py in range(stride):
+        tys = [dy for dy in range(kh) if (py + dy - pad_top) % stride == 0]
+        for px in range(stride):
+            txs = [dx for dx in range(kw) if (px + dx - pad_left) % stride == 0]
+            if not tys or not txs:
+                continue
+            sub_k = kernel[jnp.array(tys)][:, jnp.array(txs)]  # (ty, tx, Cin, Cout)
+            off_y = [(py + dy - pad_top) // stride for dy in tys]
+            off_x = [(px + dx - pad_left) // stride for dx in txs]
+            # A dense conv with arbitrary per-tap offsets == conv with the
+            # sub-kernel laid out on the offset grid.  Offsets are contiguous
+            # descending by construction; flip to ascending conv layout.
+            oy0, oy1 = min(off_y), max(off_y)
+            ox0, ox1 = min(off_x), max(off_x)
+            grid = jnp.zeros((oy1 - oy0 + 1, ox1 - ox0 + 1, Cin, Cout),
+                             kernel.dtype)
+            for a, dy in enumerate(off_y):
+                for b, dx in enumerate(off_x):
+                    grid = grid.at[dy - oy0, dx - ox0].set(sub_k[a, b])
+            # output phase pixel oi reads input rows oi+oy0 .. oi+oy1 ->
+            # forward conv VALID on x padded by (-oy0 on top? ) Use explicit
+            # padding: need x[oi + off] for oi in [0, H); pad lo = -oy0 if
+            # oy0<0 else 0 etc.  Conv (flip? lax.conv_general_dilated
+            # correlates, matching x[i + dy] indexing with kernel[dy]).
+            # out[oi] = sum_d x[oi + oy0 + d] * grid[d]; with correlation
+            # semantics out[i] = sum_d xpad[i+d]*k[d] we need pad_lo = -oy0
+            # and pad_hi = oy1 (negative pad crops).
+            res = jax.lax.conv_general_dilated(
+                x, grid,
+                window_strides=(1, 1),
+                padding=((-oy0, oy1), (-ox0, ox1)),
+                dimension_numbers=('NHWC', 'HWIO', 'NHWC'))
+            out = out.at[:, py::stride, px::stride, :].set(res)
+    return out
+
+
+def zero_mac_fraction(kh: int, kw: int, stride: int) -> float:
+    """Fraction of baseline transposed-conv MACs that hit inserted zeros
+    (what the sparse dataflow saves): 1 - 1/s^2 for k >= s."""
+    dense = kh * kw
+    live = -(-kh // stride) * (-(-kw // stride))  # ceil(k/s)^2 on average
+    return 1.0 - live / dense

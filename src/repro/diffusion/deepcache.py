@@ -1,0 +1,113 @@
+"""DeepCache (Ma et al., CVPR 2024) — the paper's strongest *algorithmic*
+baseline (Figs. 9-10): cache the deep (low-resolution) UNet features across
+adjacent timesteps and recompute only the shallow layers on "skip" steps.
+
+Rationale: in the reverse diffusion trajectory the deep features evolve
+slowly; re-running only the outermost level every step recovers most of the
+quality at a fraction of the MACs.  We implement the standard interval
+variant: a full pass every ``interval`` steps refreshes the cache; skip
+steps reuse the cached deepest up-path activation.
+
+This exists (a) as a runnable serving mode (`pipeline_deepcache`) and (b) as
+a workload transform for the photonic simulator, so the Fig. 9/10 DeepCache
+comparison point can also be *derived* instead of anchored.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.unet import (UNetConfig, attn_block, resblock,
+                               timestep_embedding, _gn_swish)
+
+
+def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
+                      cache: Optional[jax.Array], refresh: bool,
+                      context=None, quant: bool = False
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """UNet forward with DeepCache.
+
+    refresh=True  : full pass; returns (eps, new_cache) where the cache is
+                    the activation entering the LAST up level.
+    refresh=False : recompute only the outermost (full-resolution) down
+                    blocks and the last up level, splicing in the cached
+                    deep activation.
+    Static `refresh` (two jitted variants), matching the interval schedule.
+    """
+    g = cfg.groups
+    t_emb = timestep_embedding(t, cfg.base_ch)
+    t_emb = L.linear(p['t_mlp2'], L.swish(L.linear(p['t_mlp1'], t_emb)))
+    h = L.conv2d(p['conv_in'], x)
+    skips = [h]
+    # --- outermost down level (always computed) ---
+    lvl0 = p['down'][0]
+    res = cfg.img_size
+    for b in lvl0['blocks']:
+        h = resblock(b['res'], h, t_emb, g)
+        if 'attn' in b:
+            h = attn_block(b['attn'], h, g, cfg.n_heads, context, quant)
+        skips.append(h)
+
+    if refresh or cache is None:
+        hh = h
+        deep_skips = []
+        if 'down' in lvl0:
+            hh = L.conv2d(lvl0['down'], hh, stride=2)
+            deep_skips.append(hh)
+        for lvl_p in p['down'][1:]:
+            for b in lvl_p['blocks']:
+                hh = resblock(b['res'], hh, t_emb, g)
+                if 'attn' in b:
+                    hh = attn_block(b['attn'], hh, g, cfg.n_heads, context,
+                                    quant)
+                deep_skips.append(hh)
+            if 'down' in lvl_p:
+                hh = L.conv2d(lvl_p['down'], hh, stride=2)
+                deep_skips.append(hh)
+        hh = resblock(p['mid']['res1'], hh, t_emb, g)
+        hh = attn_block(p['mid']['attn'], hh, g, cfg.n_heads, context, quant)
+        hh = resblock(p['mid']['res2'], hh, t_emb, g)
+        for lvl_p in p['up'][:-1]:
+            for b in lvl_p['blocks']:
+                hh = jnp.concatenate([hh, deep_skips.pop()], axis=-1)
+                hh = resblock(b['res'], hh, t_emb, g)
+                if 'attn' in b:
+                    hh = attn_block(b['attn'], hh, g, cfg.n_heads, context,
+                                    quant)
+            if 'upconv' in lvl_p:
+                hh = L.conv_transpose2d(lvl_p['upconv'], hh, stride=2,
+                                        sparse_dataflow=cfg.sparse_dataflow)
+        new_cache = hh                  # activation entering the last level
+    else:
+        new_cache = cache
+
+    # --- outermost up level (always computed) ---
+    h_up = new_cache
+    for b in p['up'][-1]['blocks']:
+        h_up = jnp.concatenate([h_up, skips.pop()], axis=-1)
+        h_up = resblock(b['res'], h_up, t_emb, g)
+        if 'attn' in b:
+            h_up = attn_block(b['attn'], h_up, g, cfg.n_heads, context,
+                              quant)
+    h_up = _gn_swish(p['gn_out'], h_up, g)
+    return L.conv2d(p['conv_out'], h_up), new_cache
+
+
+def deepcache_workload_factor(cfg: UNetConfig, interval: int = 5) -> float:
+    """Average per-step MAC fraction vs the full UNet (for the simulator's
+    derived DeepCache point): 1 full pass + (interval-1) shallow passes."""
+    from repro.core.photonic.workload import unet_workload
+    full = unet_workload(cfg).total_macs_dense
+    # shallow pass ~ outermost down level + last up level + in/out convs:
+    # approximate by the full-resolution share of the MAC count
+    shallow_cfg = UNetConfig(
+        name=cfg.name + '-shallow', img_size=cfg.img_size, in_ch=cfg.in_ch,
+        base_ch=cfg.base_ch, ch_mults=cfg.ch_mults[:1],
+        n_res_blocks=cfg.n_res_blocks,
+        attn_resolutions=cfg.attn_resolutions, n_heads=cfg.n_heads,
+        context_dim=cfg.context_dim)
+    shallow = unet_workload(shallow_cfg).total_macs_dense
+    return (full + (interval - 1) * shallow) / (interval * full)

@@ -1,0 +1,102 @@
+"""End-to-end diffusion serving pipeline (the paper's workload).
+
+Batched request generation: noise -> iterative UNet denoising (DDPM or DDIM)
+-> (for latent models) VAE decode.  ``quant=True`` serves the UNet through
+the W8A8 path (C1) with classifier-free guidance optional for SDM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion import samplers
+from repro.diffusion.schedule import Schedule, linear_schedule
+from repro.models import autoencoder as AE
+from repro.models import unet as U
+
+
+@dataclasses.dataclass
+class DiffusionPipeline:
+    unet_cfg: U.UNetConfig
+    unet_params: Any
+    sched: Schedule
+    vae_cfg: Optional[AE.VAEConfig] = None
+    vae_params: Any = None
+    quant: bool = False
+
+    @classmethod
+    def init(cls, key, unet_cfg: U.UNetConfig,
+             vae_cfg: Optional[AE.VAEConfig] = None,
+             timesteps: Optional[int] = None, quant: bool = False):
+        k1, k2 = jax.random.split(key)
+        unet_params = U.init_unet(k1, unet_cfg)
+        vae_params = AE.init_vae(k2, vae_cfg) if vae_cfg else None
+        sched = linear_schedule(timesteps or unet_cfg.timesteps)
+        return cls(unet_cfg, unet_params, sched, vae_cfg, vae_params, quant)
+
+    def generate_deepcache(self, key, batch: int, steps: int = 50,
+                           interval: int = 5, context=None) -> jax.Array:
+        """DDIM sampling with the DeepCache baseline ([21]): a full UNet
+        pass every `interval` steps, shallow passes in between (deep
+        features reused).  Python-level step loop (two jitted variants)."""
+        import numpy as np
+        from repro.diffusion.deepcache import unet_apply_cached
+        import jax as _jax
+        sched = self.sched
+        ts = np.linspace(sched.T - 1, 0, steps).astype(int)
+        shape = self.sample_shape(batch)
+        k0, key = jax.random.split(key)
+        x = jax.random.normal(k0, shape)
+        cache = None
+        full = _jax.jit(lambda p, xx, tt, ctx: unet_apply_cached(
+            p, self.unet_cfg, xx, tt, None, True, ctx, self.quant))
+        shallow = _jax.jit(lambda p, xx, tt, c, ctx: unet_apply_cached(
+            p, self.unet_cfg, xx, tt, c, False, ctx, self.quant))
+        for i, t in enumerate(ts):
+            tb = jnp.full((batch,), int(t), jnp.int32)
+            if i % interval == 0 or cache is None:
+                eps, cache = full(self.unet_params, x, tb, context)
+            else:
+                eps, _ = shallow(self.unet_params, x, tb, cache, context)
+            ab_t = sched.alpha_bars[int(t)]
+            t_prev = int(ts[i + 1]) if i + 1 < steps else -1
+            ab_prev = sched.alpha_bars[t_prev] if t_prev >= 0 else 1.0
+            x0_pred = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+            x = jnp.sqrt(ab_prev) * x0_pred + jnp.sqrt(1 - ab_prev) * eps
+        if self.vae_params is not None:
+            x = AE.vae_decode(self.vae_params, self.vae_cfg, x)
+        return x
+
+    def _eps_fn(self, context=None, guidance: float = 0.0):
+        def eps(x, t):
+            e = U.unet_apply(self.unet_params, self.unet_cfg, x, t,
+                             context=context, quant=self.quant)
+            if guidance > 0.0 and context is not None:
+                e_unc = U.unet_apply(self.unet_params, self.unet_cfg, x, t,
+                                     context=None, quant=self.quant)
+                e = e_unc + guidance * (e - e_unc)
+            return e
+        return eps
+
+    def sample_shape(self, batch: int):
+        c = self.unet_cfg
+        return (batch, c.img_size, c.img_size, c.in_ch)
+
+    def generate(self, key, batch: int, steps: int = 50,
+                 sampler: str = 'ddim', context=None,
+                 guidance: float = 0.0) -> jax.Array:
+        """Serve one batch of generation requests; returns images/latents."""
+        eps = self._eps_fn(context, guidance)
+        shape = self.sample_shape(batch)
+        if sampler == 'ddpm':
+            z = samplers.ddpm_sample(self.sched, eps, shape, key)
+        else:
+            z = samplers.ddim_sample(self.sched, eps, shape, key,
+                                     steps=steps)
+        if self.vae_params is not None:
+            z = AE.vae_decode(self.vae_params, self.vae_cfg, z)
+        return z

@@ -1,0 +1,75 @@
+"""Reverse-process samplers: DDPM ancestral (paper Eq. 2) and DDIM."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.schedule import Schedule
+
+# eps_fn(x_t, t_batch) -> predicted noise
+EpsFn = Callable[[jax.Array, jax.Array], jax.Array]
+
+
+def ddpm_step(sched: Schedule, eps_fn: EpsFn, x_t: jax.Array, t: jax.Array,
+              key: jax.Array) -> jax.Array:
+    """One reverse step (Eq. 2): x_{t-1} = mu_theta(x_t, t) + sigma_t z."""
+    B = x_t.shape[0]
+    tb = jnp.full((B,), t, jnp.int32)
+    eps = eps_fn(x_t, tb)
+    beta = sched.betas[t]
+    alpha = sched.alphas[t]
+    ab = sched.alpha_bars[t]
+    mu = (x_t - beta / jnp.sqrt(1.0 - ab) * eps) / jnp.sqrt(alpha)
+    sigma = jnp.sqrt(beta)
+    z = jax.random.normal(key, x_t.shape, x_t.dtype)
+    return mu + jnp.where(t > 0, sigma, 0.0) * z
+
+
+def ddpm_sample(sched: Schedule, eps_fn: EpsFn, shape, key: jax.Array,
+                dtype=jnp.float32) -> jax.Array:
+    """Full T-step ancestral sampling from pure noise."""
+    k0, kloop = jax.random.split(key)
+    x_T = jax.random.normal(k0, shape, dtype)
+
+    def body(i, carry):
+        x, k = carry
+        t = sched.T - 1 - i
+        k, ks = jax.random.split(k)
+        return ddpm_step(sched, eps_fn, x, t, ks), k
+
+    x0, _ = jax.lax.fori_loop(0, sched.T, body, (x_T, kloop))
+    return x0
+
+
+def ddim_sample(sched: Schedule, eps_fn: EpsFn, shape, key: jax.Array,
+                steps: int = 50, eta: float = 0.0,
+                dtype=jnp.float32) -> jax.Array:
+    """DDIM with a uniform sub-sequence of `steps` timesteps."""
+    ts = jnp.linspace(sched.T - 1, 0, steps).astype(jnp.int32)
+    k0, kloop = jax.random.split(key)
+    x = jax.random.normal(k0, shape, dtype)
+
+    def body(i, carry):
+        x, k = carry
+        t = ts[i]
+        t_prev = jnp.where(i + 1 < steps, ts[jnp.minimum(i + 1, steps - 1)],
+                           -1)
+        B = x.shape[0]
+        eps = eps_fn(x, jnp.full((B,), t, jnp.int32))
+        ab_t = sched.alpha_bars[t]
+        ab_prev = jnp.where(t_prev >= 0,
+                            sched.alpha_bars[jnp.maximum(t_prev, 0)], 1.0)
+        x0_pred = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+        sigma = eta * jnp.sqrt((1 - ab_prev) / (1 - ab_t)) * \
+            jnp.sqrt(1 - ab_t / ab_prev)
+        k, ks = jax.random.split(k)
+        z = jax.random.normal(ks, x.shape, x.dtype)
+        x_prev = jnp.sqrt(ab_prev) * x0_pred + \
+            jnp.sqrt(jnp.maximum(1 - ab_prev - sigma ** 2, 0.0)) * eps + \
+            sigma * z
+        return x_prev, k
+
+    x0, _ = jax.lax.fori_loop(0, steps, body, (x, kloop))
+    return x0

@@ -1,0 +1,57 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+ nodes the cross-pod (DCI) all-reduce is the scarcest bandwidth.
+We provide int8 symmetric gradient compression with **error feedback**
+(residual carried to the next step, so compression error does not bias the
+optimizer — Karimireddy et al. 2019): the pod-local reduction runs at full
+precision, only the cross-pod exchange is quantized.
+
+Usage inside a train step:
+    g_q, new_residual = compress_with_feedback(grads, residual)
+    g_sync = psum_over_pods(decompress(g_q))   # 4x less DCI traffic
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedTree(NamedTuple):
+    q: Any          # int8 pytree
+    scale: Any      # f32 scalars per leaf
+
+
+def compress(grads: Any) -> CompressedTree:
+    def one(g):
+        amax = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+        scale = amax / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    qs = jax.tree_util.tree_map(lambda g: one(g)[0], grads)
+    scales = jax.tree_util.tree_map(lambda g: one(g)[1], grads)
+    return CompressedTree(qs, scales)
+
+
+def decompress(c: CompressedTree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, c.q, c.scale)
+
+
+def compress_with_feedback(grads: Any, residual: Any
+                           ) -> Tuple[CompressedTree, Any]:
+    """Quantize (grads + residual); the new residual is what quantization
+    lost."""
+    corrected = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    c = compress(corrected)
+    recon = decompress(c)
+    new_residual = jax.tree_util.tree_map(
+        lambda x, y: x - y, corrected, recon)
+    return c, new_residual
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

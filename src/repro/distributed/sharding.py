@@ -1,0 +1,240 @@
+"""Sharding rules: parameter / activation / cache PartitionSpecs.
+
+2-D weight sharding (MaxText-style "fsdp x tensor"): matmul weights shard
+their contracting (d_model-ish) dim over ``data`` (FSDP — XLA all-gathers a
+layer's weights just before use, inside the scanned layer body, which
+overlaps with the previous layer's compute) and their output dim over
+``model`` (tensor parallelism).  Expert dims shard over ``model`` (expert
+parallelism).  The ``pod`` axis is pure DP: parameters are replicated across
+pods and gradients all-reduce over it.
+
+Rules are path-regex based with a divisibility fallback: any axis that does
+not divide the dimension is dropped (replicated) rather than failing — the
+dry-run prints what was dropped so sharding gaps are visible, not silent.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# (path regex, spec for the TRAILING dims of the leaf)
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r'embed/table$', ('model', 'data')),
+    (r'lm_head/w(/q|/scale)?$', ('data', 'model')),
+    # projections with output dim sharded over tensor axis
+    (r'(wq|wk|wv|xq|xk|xv|up|gate|in_z|in_xbc|in_dt|w_dkv|w_kpe|w_uk|w_uv)'
+     r'/w(/q|/scale)?$', ('data', 'model')),
+    # projections back to d_model: input dim over tensor axis
+    (r'(wo|xo|down|out_proj)/w(/q|/scale)?$', ('model', 'data')),
+    (r'router/w$', ('data', None)),
+    # MoE expert banks: expert-parallel over 'model', FSDP over 'data'
+    (r'(w_gate|w_up)(/q|/scale)?$', ('model', 'data', None)),
+    (r'w_down(/q|/scale)?$', ('model', None, 'data')),
+    # mamba per-channel params
+    (r'conv_w$', (None, 'model')),
+    (r'conv_b$', ('model',)),
+    (r'(A_log|D|dt_bias)$', ('model',)),
+    # biases / norms: replicated
+    (r'/b$', (None,)),
+    (r'(scale|bias)$', (None,)),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if hasattr(e, 'key'):
+            parts.append(str(e.key))
+        elif hasattr(e, 'idx'):
+            parts.append(str(e.idx))
+    return '/'.join(parts)
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return int(mesh.shape.get(name, 1))
+
+
+def _fit_spec(spec: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+              mesh: Mesh, dropped: list, path: str) -> P:
+    """Left-pad with None to ndim; drop axes that don't divide."""
+    full = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    full = full[:len(shape)]
+    out = []
+    for dim, ax in zip(shape, full):
+        if ax is not None and ax in mesh.axis_names and \
+                dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            if ax is not None:
+                dropped.append((path, dim, ax))
+            out.append(None)
+    return P(*out)
+
+
+def param_pspecs(params: Any, mesh: Mesh, verbose: bool = False,
+                 model_axis_tp: bool = True) -> Any:
+    """PartitionSpec pytree matching ``params``.
+
+    ``model_axis_tp=False`` (EP-only mode): non-expert weights drop the
+    'model' axis and shard FSDP-only — expert banks, embedding and lm_head
+    keep it."""
+    dropped: list = []
+    keep_model = (r'(w_gate|w_up)(/q|/scale)?$', r'w_down(/q|/scale)?$',
+                  r'embed/table$', r'lm_head/w(/q|/scale)?$')
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = np.shape(leaf) if not hasattr(leaf, 'shape') else leaf.shape
+        if len(shape) == 0:
+            return P()
+        for pat, spec in PARAM_RULES:
+            if re.search(pat, ps):
+                if not model_axis_tp and not any(
+                        re.search(k, ps) for k in keep_model):
+                    spec = tuple(None if a == 'model' else a for a in spec)
+                return _fit_spec(spec, shape, mesh, dropped, ps)
+        return P(*([None] * len(shape)))
+
+    specs = jax.tree_util.tree_map_with_path(spec_for, params)
+    if verbose and dropped:
+        for path, dim, ax in dropped[:20]:
+            print(f'[sharding] dropped axis {ax!r} on {path} (dim {dim})')
+    return specs
+
+
+def dp_spec(mesh: Mesh, batch: int):
+    """The data-parallel sharding of a batch dim (pod+data), or None when
+    the batch is too small to shard (long-context decode)."""
+    from repro.launch.mesh import dp_axes
+    axes = dp_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if 'data' in axes and batch % mesh.shape['data'] == 0:
+        return 'data'
+    return None
+
+
+def batch_pspecs(mesh: Mesh, batch: int, ndim: int = 2) -> P:
+    """Token/label arrays (B, S, ...)."""
+    return P(dp_spec(mesh, batch), *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, batch: int,
+                 shard_seq_when_unbatched: bool = True,
+                 mla_cache_seq: bool = False) -> Any:
+    """KV / state caches.  Layout per leaf (leading scan-layer dim, then
+    batch):
+      attn k/v      (L, B, T, Hkv, hd) -> (None, dp, seq?, 'model', None)
+      mla  c_kv     (L, B, T, rank)    -> (None, dp, seq?, None)
+      mamba conv    (L, B, K-1, cd)    -> (None, dp, None, 'model')
+      mamba state   (L, B, H, P, N)    -> (None, dp, 'model', None, None)
+    When the batch doesn't shard (B=1 long-context), the cache sequence dim
+    shards over 'data' instead (sequence parallelism for the cache).
+    """
+    dp = dp_spec(mesh, batch)
+    seq_ax = 'data' if (dp is None and shard_seq_when_unbatched) else None
+
+    def spec_for(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if re.search(r'(k|v|c_kv|k_pe)$', ps) and nd >= 4:
+            # (L, B, T, ...) attention-ish
+            dims = [None, dp, seq_ax]
+            if re.search(r'(k|v)$', ps) and nd == 5:
+                # heads over 'model' when they divide; otherwise shard the
+                # SEQUENCE dim over 'model' (keeps the per-chip cache under
+                # the HBM budget for 36/56/28-head archs — DESIGN.md §8)
+                if shape[3] % _axis_size(mesh, 'model') == 0:
+                    dims += ['model', None]
+                elif seq_ax is None and \
+                        shape[2] % _axis_size(mesh, 'model') == 0:
+                    dims = [None, dp, 'model', None, None]
+                else:
+                    dims += [None, None]
+            else:
+                # MLA compressed cache (L, B, T, rank): optionally shard the
+                # sequence dim over 'model' (it has no head dim to shard)
+                if mla_cache_seq and seq_ax is None:
+                    dims = [None, dp, 'model']
+                dims += [None] * (nd - len(dims))
+            return _fit_and_check(dims[:nd], shape)
+        if re.search(r'conv$', ps):
+            return _fit_and_check([None, dp, None, 'model'][:nd], shape)
+        if re.search(r'state$', ps):
+            return _fit_and_check([None, dp, 'model', None, None][:nd],
+                                  shape)
+        return P(*([None] * nd))
+
+    def _fit_and_check(dims, shape):
+        out = []
+        for d, ax in zip(shape, dims):
+            if ax is None:
+                out.append(None)
+            elif isinstance(ax, tuple):
+                size = int(np.prod([mesh.shape[a] for a in ax]))
+                out.append(ax if d % size == 0 else None)
+            else:
+                out.append(ax if d % _axis_size(mesh, ax) == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def shard_hint(x, *spec):
+    """``with_sharding_constraint`` that degrades gracefully: outside a mesh
+    context (CPU smoke tests) it is the identity; axes that are absent from
+    the mesh or don't divide the dim are dropped.  ``spec`` entries may be
+    axis names, tuples of axis names, or the sentinel ``'dp'`` (all
+    data-parallel axes present in the mesh)."""
+    mesh = None
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            # `with mesh:` (legacy context) is invisible to the abstract
+            # mesh; read the thread-resource env instead.
+            from jax._src import mesh as _mesh_lib
+            phys = _mesh_lib.thread_resources.env.physical_mesh
+            mesh = phys if phys.axis_names else None
+    except Exception:
+        mesh = None
+    if mesh is None or not mesh.axis_names:
+        return x
+    names = set(mesh.axis_names)
+    out = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == 'dp':
+            ax = tuple(a for a in ('pod', 'data') if a in names)
+            if not ax:
+                out.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in ax]))
+            if dim % size == 0:
+                out.append(ax if len(ax) > 1 else ax[0])
+            elif 'data' in ax and dim % mesh.shape['data'] == 0:
+                out.append('data')
+            else:
+                out.append(None)
+            continue
+        if isinstance(ax, str) and ax in names and \
+                dim % int(mesh.shape[ax]) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    out += [None] * (x.ndim - len(out))
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def named(mesh: Mesh, pspecs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

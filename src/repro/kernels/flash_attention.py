@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash attention with the paper's streaming LSE softmax.
+
+DiffLight (C2) digitizes attention scores as they stream out of the MR banks
+and *concurrently* tracks gamma_max with a comparator, accumulating
+ln-sum-exp via LUTs (Eq. 4).  Blockwise in VMEM, that pipeline is exactly the
+online-softmax recurrence:
+
+    m'   = max(m, max_j s_j)            # comparator
+    l'   = l * e^(m-m') + sum_j e^(s_j - m')   # LUT exp + accumulate
+    acc' = acc * e^(m-m') + P V_blk     # MR bank no.7 of the attention head
+    out  = acc / l                      # ops 2+3 of Eq. 4 (ln + subtract)
+
+Grid: (batch*heads, nq, nk) with the KV loop innermost; (m, l, acc) live in
+VMEM scratch across KV steps.  Causal blocks beyond the diagonal are skipped
+(grid-level work elision — the photonic analogue is not lighting idle banks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, nk: int, bq: int, bk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks (k block strictly after q block)
+        pl.when(ki * bk <= qi * bq + bq - 1)(_step)
+    else:
+        _step()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=('causal', 'scale', 'bq', 'bk',
+                                    'interpret'))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = False,
+                           scale: float | None = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q (BH, S, d), k/v (BH, T, d) -> (BH, S, d).  S % bq == 0, T % bk == 0
+    (ops.py pads and masks)."""
+    BH, S, d = q.shape
+    T = k.shape[1]
+    assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
+    if scale is None:
+        scale = d ** -0.5
+    nq, nk = S // bq, T // bk
+    grid = (BH, nq, nk)
+    kern = functools.partial(_kernel, scale=scale, causal=causal, nk=nk,
+                             bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are swept against in tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def w8a8_matmul_ref(xq: jax.Array, x_scale: jax.Array, wq: jax.Array,
+                    w_scale: jax.Array) -> jax.Array:
+    """Same contract as w8a8_matmul_kernel: int8 operands, f32 scales."""
+    acc = jax.lax.dot_general(
+        xq, wq, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = False, scale: float | None = None
+                  ) -> jax.Array:
+    """Naive full-materialization attention (BH, S, d)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    s = jnp.einsum('bsd,btd->bst', q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        S, T = s.shape[-2:]
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum('bst,btd->bsd', p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gn_swish_ref(x: jax.Array, scale: jax.Array, bias: jax.Array, *,
+                 groups: int = 32, eps: float = 1e-5) -> jax.Array:
+    N, H, W, C = x.shape
+    cg = C // groups
+    xf = x.astype(jnp.float32).reshape(N, H, W, groups, cg)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(N, H, W, C)
+    y = y * scale + bias
+    return (y * jax.nn.sigmoid(y)).astype(x.dtype)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: W8A8 GEMM (DiffLight C1, MR-bank MAC datapath).
+
+Photonic mapping -> TPU mapping:
+  * MR bank array (K rows x N cols)        -> one MXU-aligned VMEM tile
+  * activation MR bank + weight MR bank    -> int8 x int8 systolic matmul
+  * balanced photodetector accumulation    -> int32 accumulator (scratch)
+  * MR transmission calibration (scales)   -> per-row activation scale and
+                                              per-column weight scale epilogue
+  * VCSEL / DAC sharing (operand reuse)    -> grid ordering keeps the weight
+    tile resident across the M dimension (weight-stationary: the "DAC
+    sharing" energy trick becomes HBM-traffic reuse)
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the int32 accumulator lives in VMEM
+scratch across the K loop; the f32 epilogue (scale multiply) runs once at the
+final K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(xq_ref, xs_ref, wq_ref, ws_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq_ref[...], wq_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        # rescale: out = acc * x_scale[m] * w_scale[n]
+        out_ref[...] = (acc_ref[...].astype(jnp.float32)
+                        * xs_ref[...] * ws_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=('bm', 'bn', 'bk', 'interpret'))
+def w8a8_matmul_kernel(xq: jax.Array, x_scale: jax.Array, wq: jax.Array,
+                       w_scale: jax.Array, *, bm: int = DEFAULT_BM,
+                       bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                       interpret: bool = False) -> jax.Array:
+    """xq (M, K) int8, x_scale (M, 1) f32, wq (K, N) int8, w_scale (1, N) f32
+    -> (M, N) f32.  M, N, K must be multiples of the block sizes (ops.py
+    pads)."""
+    M, K = xq.shape
+    _, N = wq.shape
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    nk = K // bk
+    grid = (M // bm, N // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),   # xq
+            pl.BlockSpec((bm, 1), lambda m, n, k: (m, 0)),    # x_scale
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),   # wq
+            pl.BlockSpec((1, bn), lambda m, n, k: (0, n)),    # w_scale
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, x_scale, wq, w_scale)

@@ -1,0 +1,318 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder device count before any jax import (jax locks the
+device count at first init).  Run:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh both --arch all
+
+Outputs one JSON per cell under results/dryrun/ with memory analysis, cost
+analysis, and the parsed collective traffic — the roofline inputs.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+    + " " + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, shape_cells
+from repro.configs.registry import ARCHS, REAL_VOCABS, get
+from repro.distributed import sharding as SH
+from repro.launch import steps as ST
+from repro.launch.mesh import make_production_mesh
+from repro.optim.adamw import AdamWConfig, init_adamw
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), '..', '..', '..',
+                           'results', 'dryrun')
+
+# --- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+ICI_BW = 50e9                     # B/s per link
+
+_DTYPE_BYTES = {'f64': 8, 'f32': 4, 'bf16': 2, 'f16': 2, 's64': 8,
+                'u64': 8, 's32': 4, 'u32': 4, 's16': 2, 'u16': 2,
+                's8': 1, 'u8': 1, 'pred': 1, 'c64': 8, 'c128': 16}
+
+_COLL_RE = re.compile(
+    r'=\s*((?:\([^)]*\)|\S+))\s+'
+    r'(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)'
+    r'(?:-start)?\(')
+_SHAPE_RE = re.compile(r'(\w+)\[([\d,]*)\]')
+
+
+def _tensor_bytes(typestr: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(','):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-partition output bytes of every collective op, with ring-cost
+    weighting (all-reduce moves ~2x, others ~1x the payload)."""
+    per_kind: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        out_type, kind = m.group(1), m.group(2)
+        b = _tensor_bytes(out_type)
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+        count[kind] = count.get(kind, 0) + 1
+    weights = {'all-gather': 1.0, 'all-reduce': 2.0, 'reduce-scatter': 1.0,
+               'all-to-all': 1.0, 'collective-permute': 1.0}
+    weighted = sum(per_kind.get(k, 0.0) * w for k, w in weights.items())
+    return {'bytes_per_kind': per_kind, 'count_per_kind': count,
+            'weighted_bytes': weighted}
+
+
+def _bf16_params(struct):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype in (jnp.float32,) else s.dtype),
+        struct)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                serve_params_bf16: bool = True,
+                opt_cfg: Optional['AdamWConfig'] = None,
+                serve_quant: bool = False,
+                mla_cache_seq: bool = False):
+    """ShapeDtypeStruct stand-ins + shardings for one cell.
+    Returns (fn, args tuple, in_shardings tuple, donate_argnums)."""
+    params_struct = jax.eval_shape(
+        lambda: ST.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = SH.param_pspecs(params_struct, mesh,
+                              model_axis_tp=cfg.model_axis_tp)
+    B, S = shape.global_batch, shape.seq_len
+    real_vocab = REAL_VOCABS.get(cfg.name.replace('-smoke', ''), None)
+
+    if shape.kind == 'train':
+        import functools as _ft
+        if opt_cfg is None:
+            # >100B archs default to bf16 optimizer moments (§Perf fixes)
+            big = cfg.name.split('-smoke')[0] in (
+                'mistral-large-123b', 'jamba-1.5-large-398b')
+            opt_cfg = AdamWConfig(
+                moment_dtype='bfloat16' if big else 'float32')
+        opt_struct = jax.eval_shape(
+            _ft.partial(init_adamw,
+                        moment_dtype=jnp.dtype(opt_cfg.moment_dtype)),
+            params_struct)
+        # AdamWState(step, m, v): m/v mirror the param tree, step is scalar
+        from jax.sharding import PartitionSpec as P
+        _pp = _ft.partial(SH.param_pspecs, mesh=mesh,
+                          model_axis_tp=cfg.model_axis_tp)
+        o_specs = type(opt_struct)(P(), _pp(opt_struct.m),
+                                   _pp(opt_struct.v))
+        batch_struct = ST.make_batch_struct(cfg, shape)
+        b_specs = {k: SH.batch_pspecs(mesh, B, v.ndim)
+                   for k, v in batch_struct.items()}
+        fn = ST.build_train_step(cfg, opt_cfg, real_vocab)
+        return (fn, (params_struct, opt_struct, batch_struct),
+                (p_specs, o_specs, b_specs), (0, 1))
+
+    if serve_quant:
+        from repro.core.quantization import quantize_params
+        params_struct = jax.eval_shape(quantize_params, params_struct)
+    elif serve_params_bf16:
+        params_struct = _bf16_params(params_struct)
+    if serve_quant:
+        p_specs = SH.param_pspecs(params_struct, mesh,
+                                  model_axis_tp=cfg.model_axis_tp)
+    state_struct = jax.eval_shape(
+        lambda: ST.init_serve_state(cfg, B, S))
+    c_specs = SH.cache_pspecs(state_struct, mesh, B,
+                              mla_cache_seq=mla_cache_seq)
+    from jax.sharding import PartitionSpec as P
+    if cfg.family == 'encdec':
+        c_specs['memory'] = P(SH.dp_spec(mesh, B), None, None)
+    if shape.kind == 'prefill':
+        batch_struct = ST.make_batch_struct(cfg, shape)
+        batch_struct.pop('labels')
+        b_specs = {k: SH.batch_pspecs(mesh, B, v.ndim)
+                   for k, v in batch_struct.items()}
+        fn = ST.build_prefill_step(cfg, quant=serve_quant)
+        return (fn, (params_struct, state_struct, batch_struct),
+                (p_specs, c_specs, b_specs), (1,))
+    # decode
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    t_spec = SH.batch_pspecs(mesh, B, 2)
+    fn = ST.build_decode_step(cfg, quant=serve_quant)
+    return (fn, (params_struct, state_struct, token, pos),
+            (p_specs, c_specs, t_spec, P()), (1,))
+
+
+def _compile_cell(cfg, shape, mesh, **kw):
+    fn, args, in_specs, donate = input_specs(cfg, shape, mesh, **kw)
+    shardings = tuple(SH.named(mesh, s) for s in in_specs)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _scan_units(cfg: ArchConfig) -> int:
+    if cfg.family == 'encdec':
+        return 1
+    from repro.models.transformer import _block_kinds
+    return len(_block_kinds(cfg))
+
+
+def cost_probe(cfg: ArchConfig, shape: ShapeConfig, mesh,
+               **kw) -> Dict[str, Any]:
+    """XLA cost analysis counts a while (scan) body once, ignoring the trip
+    count — so flops/bytes/collectives are probed on UNROLLED depth-U and
+    depth-2U models and extrapolated linearly to the full depth (exact:
+    every per-layer cost is affine in depth)."""
+    import dataclasses as dc
+    U = _scan_units(cfg)
+    vals = []
+    for mult in (1, 2):
+        if cfg.family == 'encdec':
+            pc = dc.replace(cfg, n_layers=mult, n_enc_layers=mult,
+                            unroll_layers=True)
+            steps_full = cfg.n_layers
+        else:
+            pc = dc.replace(cfg, n_layers=U * mult, unroll_layers=True)
+            steps_full = cfg.n_layers // U
+        compiled = _compile_cell(pc, shape, mesh, **kw)
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text())
+        vals.append((float(cost.get('flops', 0.0)),
+                     float(cost.get('bytes accessed', 0.0)),
+                     float(coll['weighted_bytes'])))
+    (f1, b1, c1), (f2, b2, c2) = vals
+    k = steps_full - 1
+    return {
+        'scan_units': U, 'steps_full': steps_full,
+        'flops_per_device': f1 + (f2 - f1) * k,
+        'bytes_accessed_per_device': b1 + (b2 - b1) * k,
+        'collective_bytes_per_device': c1 + (c2 - c1) * k,
+        'probe_raw': {'depth_1U': vals[0], 'depth_2U': vals[1]},
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             mesh=None, out_dir: Optional[str] = None,
+             with_probe: bool = True,
+             cfg: Optional[ArchConfig] = None, **kw) -> Dict[str, Any]:
+    cfg = cfg or get(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, mesh, **kw)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    probe = (cost_probe(cfg, shape, mesh, **kw) if with_probe else {
+        'flops_per_device': float(cost.get('flops', 0.0)),
+        'bytes_accessed_per_device': float(cost.get('bytes accessed', 0.0)),
+        'collective_bytes_per_device': float(coll['weighted_bytes'])})
+    flops = probe['flops_per_device']
+    bytes_accessed = probe['bytes_accessed_per_device']
+    coll_bytes = probe['collective_bytes_per_device']
+    result = {
+        'arch': arch_name, 'shape': shape_name,
+        'mesh': dict(mesh.shape), 'devices': n_dev,
+        'compile_s': round(t_compile, 1),
+        'memory': {
+            'argument_bytes': int(getattr(mem, 'argument_size_in_bytes', 0)),
+            'output_bytes': int(getattr(mem, 'output_size_in_bytes', 0)),
+            'peak_bytes_per_device': int(
+                getattr(mem, 'peak_memory_in_bytes', 0)),
+        },
+        'cost': probe,
+        'collectives_scanned_body': coll,
+        'roofline': {
+            'compute_s': flops / PEAK_FLOPS_BF16,
+            'memory_s': bytes_accessed / HBM_BW,
+            'collective_s': coll_bytes / ICI_BW,
+        },
+    }
+    r = result['roofline']
+    result['roofline']['dominant'] = max(
+        ('compute_s', 'memory_s', 'collective_s'), key=lambda k: r[k])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = 'multipod' if multi_pod else 'singlepod'
+        path = os.path.join(out_dir,
+                            f'{arch_name}__{shape_name}__{tag}.json')
+        with open(path, 'w') as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def cells_for(arch_name: str):
+    return [s.name for s in shape_cells(get(arch_name))]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--arch', default='all')
+    ap.add_argument('--shape', default='all')
+    ap.add_argument('--mesh', default='both',
+                    choices=['single', 'multi', 'both'])
+    ap.add_argument('--out', default=os.path.abspath(RESULTS_DIR))
+    ap.add_argument('--skip-existing', action='store_true')
+    args = ap.parse_args()
+    archs = sorted(ARCHS) if args.arch == 'all' else args.arch.split(',')
+    meshes = {'single': [False], 'multi': [True],
+              'both': [False, True]}[args.mesh]
+    failures = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        tag = 'multipod' if multi else 'singlepod'
+        for a in archs:
+            shapes = (cells_for(a) if args.shape == 'all'
+                      else args.shape.split(','))
+            for s in shapes:
+                if s not in cells_for(a):
+                    print(f'SKIP {a} x {s} ({tag}): cell not live '
+                          '(full-attention arch, see DESIGN.md)')
+                    continue
+                path = os.path.join(args.out, f'{a}__{s}__{tag}.json')
+                if args.skip_existing and os.path.exists(path):
+                    print(f'skip existing {a} x {s} ({tag})')
+                    continue
+                print(f'=== {a} x {s} ({tag}) ===', flush=True)
+                try:
+                    r = run_cell(a, s, multi, mesh=mesh, out_dir=args.out)
+                    print(f'    ok: compile={r["compile_s"]}s '
+                          f'peak/dev={r["memory"]["peak_bytes_per_device"]/2**30:.2f}GiB '
+                          f'dominant={r["roofline"]["dominant"]}', flush=True)
+                except Exception as e:
+                    failures.append((a, s, tag, repr(e)))
+                    traceback.print_exc()
+    if failures:
+        print('\nFAILURES:')
+        for f in failures:
+            print(' ', f)
+        raise SystemExit(1)
+    print('\nALL CELLS PASSED')
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,115 @@
+"""Roofline report: read the dry-run JSONs and produce the EXPERIMENTS.md
+tables (three terms per cell, dominant bottleneck, MODEL_FLOPS ratio).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS, get
+
+# analytic parameter counts (computed once via eval_shape, cached here by
+# the report generator)
+
+
+def count_params(arch_name: str) -> int:
+    import jax
+    import numpy as np
+    from repro.launch.steps import init_params
+    cfg = get(arch_name)
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    return sum(int(np.prod(s.shape)) for s in
+               jax.tree_util.tree_leaves(shapes))
+
+
+def active_params(arch_name: str, total: int) -> int:
+    """MoE: 6*N_active*D — activated params per token."""
+    cfg = get(arch_name)
+    if cfg.moe is None and cfg.family != 'hybrid':
+        return total
+    import jax
+    import numpy as np
+    from repro.launch.steps import init_params
+    shapes = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                get(arch_name)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    act = 0
+    for path, leaf in flat:
+        p = '/'.join(str(getattr(e, 'key', getattr(e, 'idx', ''))) for e in path)
+        n = int(np.prod(leaf.shape))
+        if any(k in p for k in ('w_gate', 'w_up', 'w_down')):
+            m = cfg.moe
+            n = n * m.top_k // m.n_experts
+        act += n
+    return act
+
+
+def model_flops(arch_name: str, shape_name: str, n_active: int) -> float:
+    """MODEL_FLOPS: 6*N*D train, 2*N*D prefill, 2*N*B decode."""
+    s = SHAPES[shape_name]
+    tokens = s.global_batch * (s.seq_len if s.kind != 'decode' else 1)
+    mult = 6.0 if s.kind == 'train' else 2.0
+    return mult * n_active * tokens
+
+
+def load_cells(result_dir: str, mesh_tag: str = 'singlepod'):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(result_dir,
+                                              f'*__{mesh_tag}.json'))):
+        r = json.load(open(path))
+        cells[(r['arch'], r['shape'])] = r
+    return cells
+
+
+def report(result_dir: str, mesh_tag: str = 'singlepod',
+           with_params: bool = True) -> str:
+    cells = load_cells(result_dir, mesh_tag)
+    lines = []
+    lines.append(
+        '| arch | shape | compute s | memory s | coll s | dominant | '
+        'peak GiB/dev | MODEL_FLOPS/HLO | note |')
+    lines.append('|---|---|---|---|---|---|---|---|---|')
+    n_cache: Dict[str, int] = {}
+    for (arch, shape), r in sorted(cells.items()):
+        rf = r['roofline']
+        dev = r['devices']
+        ratio = ''
+        note = ''
+        if with_params:
+            if arch not in n_cache:
+                total = count_params(arch)
+                n_cache[arch] = active_params(arch, total)
+            mf = model_flops(arch, shape, n_cache[arch])
+            hlo_global = r['cost']['flops_per_device'] * dev
+            if hlo_global > 0:
+                ratio = f'{mf / hlo_global:.2f}'
+        dom = rf['dominant'].replace('_s', '')
+        peak = r['memory']['peak_bytes_per_device'] / 2 ** 30
+        if peak > 16:
+            note = 'OVER 16GiB v5e budget'
+        lines.append(
+            f'| {arch} | {shape} | {rf["compute_s"]:.3g} | '
+            f'{rf["memory_s"]:.3g} | {rf["collective_s"]:.3g} | {dom} | '
+            f'{peak:.2f} | {ratio} | {note} |')
+    return '\n'.join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument('--dir', default=os.path.join(
+        os.path.dirname(__file__), '..', '..', '..', 'results', 'dryrun'))
+    ap.add_argument('--mesh', default='singlepod')
+    ap.add_argument('--no-params', action='store_true')
+    args = ap.parse_args()
+    print(report(os.path.abspath(args.dir), args.mesh,
+                 with_params=not args.no_params))
+
+
+if __name__ == '__main__':
+    main()

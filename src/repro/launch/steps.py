@@ -1,0 +1,102 @@
+"""Jittable train / prefill / decode step builders, shared by the training
+loop, the serving loop, and the multi-pod dry-run."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+
+def init_params(key, cfg: ArchConfig):
+    if cfg.family == 'encdec':
+        return ED.init_encdec(key, cfg)
+    return T.init_lm(key, cfg)
+
+
+def build_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                     real_vocab: Optional[int] = None,
+                     dtype=jnp.bfloat16) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            if cfg.family == 'encdec':
+                return ED.encdec_loss(p, cfg, batch['frames'],
+                                      batch['tokens'], batch['labels'],
+                                      dtype=dtype, real_vocab=real_vocab)
+            return T.lm_loss(p, cfg, batch['tokens'], batch['labels'],
+                             dtype=dtype, real_vocab=real_vocab)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        return new_params, new_opt, {'loss': loss, 'grad_norm': gnorm}
+
+    return train_step
+
+
+def init_serve_state(cfg: ArchConfig, batch: int, max_len: int,
+                     cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if cfg.family == 'encdec':
+        enc_len = min(max_len, 4096)
+        return {'cache': ED.init_dec_cache(cfg, batch, max_len, cache_dtype),
+                'memory': jnp.zeros((batch, enc_len, cfg.d_model),
+                                    cache_dtype)}
+    return {'cache': T.init_lm_cache(cfg, batch, max_len, cache_dtype)}
+
+
+def build_prefill_step(cfg: ArchConfig, dtype=jnp.bfloat16,
+                       quant: bool = False) -> Callable:
+    """(params, serve_state, batch) -> (next_token, serve_state)."""
+
+    def prefill(params, state, batch):
+        if cfg.family == 'encdec':
+            logits, cache, memory = ED.encdec_prefill(
+                params, cfg, batch['frames'], batch['tokens'],
+                state['cache'], dtype=dtype)
+            state = {'cache': cache, 'memory': memory.astype(
+                state['memory'].dtype)}
+        else:
+            logits, cache = T.lm_prefill(params, cfg, batch['tokens'],
+                                         state['cache'], dtype=dtype,
+                                         quant=quant)
+            state = {'cache': cache}
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    return prefill
+
+
+def build_decode_step(cfg: ArchConfig, dtype=jnp.bfloat16,
+                      quant: bool = False) -> Callable:
+    """(params, serve_state, token (B,1), pos ()) -> (token, serve_state)."""
+
+    def decode(params, state, token, pos):
+        if cfg.family == 'encdec':
+            logits, cache = ED.encdec_decode(params, cfg, token,
+                                             state['cache'], pos,
+                                             state['memory'], dtype=dtype)
+            state = dict(state, cache=cache)
+        else:
+            logits, cache = T.lm_decode(params, cfg, token, state['cache'],
+                                        pos, dtype=dtype, quant=quant)
+            state = dict(state, cache=cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    return decode
+
+
+def make_batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for one training batch (input_specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {'tokens': jax.ShapeDtypeStruct((B, S), jnp.int32),
+             'labels': jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == 'encdec':
+        batch['frames'] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.bfloat16)
+    return batch

@@ -1,0 +1,97 @@
+"""Latent VAE for LDM / SDM (encoder for training, decoder at sampling).
+
+Downsample factor f = 2^(len(ch_mults)-1).  KL-regularized bottleneck as in
+LDM; only the decoder sits on the serving path (latents -> pixels after the
+denoising loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class VAEConfig:
+    img_size: int
+    in_ch: int = 3
+    z_ch: int = 4
+    base_ch: int = 128
+    ch_mults: Tuple[int, ...] = (1, 2, 4, 4)
+    groups: int = 32
+
+
+def _res(key, c_in, c_out):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {'gn1': L.init_groupnorm(c_in),
+         'conv1': L.init_conv(k1, 3, 3, c_in, c_out),
+         'gn2': L.init_groupnorm(c_out),
+         'conv2': L.init_conv(k2, 3, 3, c_out, c_out)}
+    if c_in != c_out:
+        p['skip'] = L.init_conv(k3, 1, 1, c_in, c_out)
+    return p
+
+
+def _res_apply(p, x, g):
+    h = L.conv2d(p['conv1'], L.swish(L.groupnorm(p['gn1'], x, g)))
+    h = L.conv2d(p['conv2'], L.swish(L.groupnorm(p['gn2'], h, g)))
+    return (L.conv2d(p['skip'], x) if 'skip' in p else x) + h
+
+
+def init_vae(key, cfg: VAEConfig) -> Dict[str, Any]:
+    it = iter(jax.random.split(key, 256))
+    enc, ch = [], cfg.base_ch
+    p = {'enc_in': L.init_conv(next(it), 3, 3, cfg.in_ch, cfg.base_ch)}
+    for lvl, m in enumerate(cfg.ch_mults):
+        out = cfg.base_ch * m
+        lvl_p = {'res': _res(next(it), ch, out)}
+        ch = out
+        if lvl < len(cfg.ch_mults) - 1:
+            lvl_p['down'] = L.init_conv(next(it), 3, 3, ch, ch)
+        enc.append(lvl_p)
+    p['enc'] = enc
+    p['enc_out'] = L.init_conv(next(it), 3, 3, ch, 2 * cfg.z_ch)
+    p['dec_in'] = L.init_conv(next(it), 3, 3, cfg.z_ch, ch)
+    dec = []
+    for lvl, m in reversed(list(enumerate(cfg.ch_mults))):
+        out = cfg.base_ch * m
+        lvl_p = {'res': _res(next(it), ch, out)}
+        ch = out
+        if lvl > 0:
+            lvl_p['up'] = L.init_conv(next(it), 4, 4, ch, ch)
+        dec.append(lvl_p)
+    p['dec'] = dec
+    p['dec_gn'] = L.init_groupnorm(ch)
+    p['dec_out'] = L.init_conv(next(it), 3, 3, ch, cfg.in_ch)
+    return p
+
+
+def vae_encode(p, cfg: VAEConfig, x: jax.Array, key=None):
+    """x (B, H, W, 3) -> latent (B, H/f, W/f, z_ch) (mean if key is None)."""
+    g = cfg.groups
+    h = L.conv2d(p['enc_in'], x)
+    for lvl_p in p['enc']:
+        h = _res_apply(lvl_p['res'], h, g)
+        if 'down' in lvl_p:
+            h = L.conv2d(lvl_p['down'], h, stride=2)
+    moments = L.conv2d(p['enc_out'], h)
+    mean, logvar = jnp.split(moments, 2, axis=-1)
+    if key is None:
+        return mean
+    return mean + jnp.exp(0.5 * jnp.clip(logvar, -30, 20)) * \
+        jax.random.normal(key, mean.shape, mean.dtype)
+
+
+def vae_decode(p, cfg: VAEConfig, z: jax.Array) -> jax.Array:
+    g = cfg.groups
+    h = L.conv2d(p['dec_in'], z)
+    for lvl_p in p['dec']:
+        h = _res_apply(lvl_p['res'], h, g)
+        if 'up' in lvl_p:
+            h = L.conv_transpose2d(lvl_p['up'], h, stride=2)  # C4 path
+    h = L.swish(L.groupnorm(p['dec_gn'], h, g))
+    return jnp.tanh(L.conv2d(p['dec_out'], h))

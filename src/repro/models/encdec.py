@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment the conv/audio frontend is a STUB: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, d) directly.  The encoder is
+a bidirectional transformer; the decoder is causal with cross-attention into
+the encoder memory.  Cross-attention uses the paper's Eq. 6 reordering when
+profitable (decode: 1 query vs T_enc memory — exactly its winning regime).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.attention import attention, init_attention, \
+    init_attention_cache
+
+
+def _sinusoid(T: int, d: int) -> jax.Array:
+    pos = jnp.arange(T)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_enc_block(key, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {
+        'attn_norm': L.init_layernorm(cfg.d_model),
+        'attn': init_attention(k1, cfg),
+        'ffn_norm': L.init_layernorm(cfg.d_model),
+        'mlp': L.init_mlp(k2, cfg.d_model, cfg.d_ff, gated=False, bias=True),
+    }
+
+
+def init_dec_block(key, cfg: ArchConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        'attn_norm': L.init_layernorm(cfg.d_model),
+        'attn': init_attention(k1, cfg),
+        'xattn_norm': L.init_layernorm(cfg.d_model),
+        'xattn': init_attention(k2, cfg),
+        'ffn_norm': L.init_layernorm(cfg.d_model),
+        'mlp': L.init_mlp(k3, cfg.d_model, cfg.d_ff, gated=False, bias=True),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    enc = jax.vmap(lambda k: init_enc_block(k, cfg))(
+        jax.random.split(ks[0], n_enc))
+    dec = jax.vmap(lambda k: init_dec_block(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        'enc_blocks': enc,
+        'enc_norm': L.init_layernorm(cfg.d_model),
+        'embed': L.init_embedding(ks[2], cfg.vocab, cfg.d_model),
+        'dec_blocks': dec,
+        'dec_norm': L.init_layernorm(cfg.d_model),
+    }
+
+
+def encode(p, cfg: ArchConfig, frames: jax.Array,
+           dtype=jnp.float32) -> jax.Array:
+    """frames (B, T_enc, d) stub embeddings -> memory (B, T_enc, d)."""
+    x = frames.astype(dtype) + _sinusoid(frames.shape[1],
+                                         cfg.d_model).astype(dtype)
+
+    def body(h, blk):
+        a, _ = attention(blk['attn'], cfg,
+                         L.layernorm(blk['attn_norm'], h), causal=False)
+        h = h + a
+        h = h + L.mlp(blk['mlp'], L.layernorm(blk['ffn_norm'], h), act='gelu')
+        return h, None
+
+    if cfg.remat != 'none':
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        n = cfg.n_enc_layers or cfg.n_layers
+        for i in range(n):
+            x, _ = body(x, jax.tree_util.tree_map(
+                lambda a: a[i], p['enc_blocks']))
+    else:
+        x, _ = jax.lax.scan(body, x, p['enc_blocks'])
+    return L.layernorm(p['enc_norm'], x)
+
+
+def _dec_scan(p, cfg: ArchConfig, x, memory, *, cache=None, cache_pos=None):
+    def body(carry, inp):
+        h = carry
+        blk, blk_cache = inp
+        a, nc = attention(blk['attn'], cfg,
+                          L.layernorm(blk['attn_norm'], h),
+                          cache=blk_cache, cache_pos=cache_pos)
+        h = h + a
+        xa, _ = attention(blk['xattn'], cfg,
+                          L.layernorm(blk['xattn_norm'], h), memory=memory)
+        h = h + xa
+        h = h + L.mlp(blk['mlp'], L.layernorm(blk['ffn_norm'], h), act='gelu')
+        return h, nc
+
+    if cfg.remat != 'none':
+        body = jax.checkpoint(body)
+    if cfg.unroll_layers:
+        at = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+        new_caches = []
+        for i in range(cfg.n_layers):
+            x, nc = body(x, (at(p['dec_blocks'], i),
+                             None if cache is None else at(cache, i)))
+            new_caches.append(nc)
+        if cache is None:
+            return x, None
+        return x, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *new_caches)
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, b: body(c, (b, None)), x,
+                            p['dec_blocks'])
+        return x, None
+    return jax.lax.scan(body, x, (p['dec_blocks'], cache))
+
+
+def decode_train(p, cfg: ArchConfig, frames: jax.Array, tokens: jax.Array,
+                 dtype=jnp.float32) -> jax.Array:
+    """Teacher-forced decoder logits (B, S, vocab)."""
+    memory = encode(p, cfg, frames, dtype)
+    B, S = tokens.shape
+    x = L.embedding(p['embed'], tokens, dtype) + \
+        _sinusoid(S, cfg.d_model).astype(dtype)
+    x, _ = _dec_scan(p, cfg, x, memory)
+    x = L.layernorm(p['dec_norm'], x)
+    return L.embedding_logits(p['embed'], x)
+
+
+def encdec_loss(p, cfg: ArchConfig, frames, tokens, labels,
+                dtype=jnp.float32, real_vocab=None) -> jax.Array:
+    logits = decode_train(p, cfg, frames, tokens, dtype).astype(jnp.float32)
+    if real_vocab is not None and real_vocab < cfg.vocab:
+        logits = jnp.where(jnp.arange(cfg.vocab) < real_vocab, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def init_dec_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    caches = [init_attention_cache(cfg, batch, max_len, dtype)
+              for _ in range(cfg.n_layers)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def encdec_prefill(p, cfg: ArchConfig, frames, tokens, cache,
+                   dtype=jnp.bfloat16):
+    memory = encode(p, cfg, frames, dtype)
+    B, S = tokens.shape
+    x = L.embedding(p['embed'], tokens, dtype) + \
+        _sinusoid(S, cfg.d_model).astype(dtype)
+    x, cache = _dec_scan(p, cfg, x, memory, cache=cache,
+                         cache_pos=jnp.int32(0))
+    x = L.layernorm(p['dec_norm'], x[:, -1:])
+    return L.embedding_logits(p['embed'], x), cache, memory
+
+
+def encdec_decode(p, cfg: ArchConfig, token, cache, pos_scalar, memory,
+                  dtype=jnp.bfloat16):
+    x = L.embedding(p['embed'], token, dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(
+        _sinusoid(cfg.max_seq_len if cfg.max_seq_len < (1 << 20) else
+                  1 << 16, cfg.d_model), pos_scalar, 1, 0).astype(dtype)
+    x, cache = _dec_scan(p, cfg, x, memory, cache=cache,
+                         cache_pos=pos_scalar)
+    x = L.layernorm(p['dec_norm'], x)
+    return L.embedding_logits(p['embed'], x), cache

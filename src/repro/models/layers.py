@@ -1,0 +1,237 @@
+"""Foundational pure-JAX layers.
+
+Conventions (framework-wide):
+  * params are plain nested dicts of jnp arrays (pytrees) — pjit-friendly;
+  * every layer is an ``init_*`` (returns params) + ``apply`` function pair;
+  * parameters are stored fp32 ("master"); compute dtype is configurable
+    (bf16 by default at scale) — casting happens at use;
+  * 2-D weights are (in, out); conv kernels are HWIO; activations NHWC / BSD.
+
+Quantized (W8A8) inference paths mirror the DiffLight MR-bank datapath: see
+``repro.core.quantization`` and ``repro.kernels.w8a8_matmul``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, quantize, quantize_per_channel
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _fan_in_init(key, shape, fan_in, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = True,
+                stddev: Optional[float] = None) -> Params:
+    kw, kb = jax.random.split(key)
+    w = (normal_init(kw, (d_in, d_out), stddev) if stddev is not None
+         else _fan_in_init(kw, (d_in, d_out), d_in))
+    p = {'w': w}
+    if bias:
+        p['b'] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(p: Params, x: jax.Array, *, dtype=None,
+           quant: bool = False) -> jax.Array:
+    """y = x @ w + b.  ``quant=True`` routes through the W8A8 path
+    (DiffLight C1)."""
+    dtype = dtype or x.dtype
+    w = p['w']
+    if quant or isinstance(w, QTensor):
+        from repro.kernels import ops as kops
+        y = kops.w8a8_matmul(x, w).astype(dtype)
+    else:
+        # bf16 compute keeps bf16 HBM layout (MXU accumulates f32
+        # internally); only f32 compute asks for an f32 accumulator output.
+        acc = jnp.float32 if dtype == jnp.float32 else dtype
+        y = jax.lax.dot_general(
+            x.astype(dtype), w.astype(dtype),
+            dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=acc).astype(dtype)
+    if 'b' in p:
+        y = y + p['b'].astype(dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, stddev: float = 0.02) -> Params:
+    return {'table': normal_init(key, (vocab, d), stddev)}
+
+
+def embedding(p: Params, ids: jax.Array, dtype=jnp.float32) -> jax.Array:
+    # one-hot matmul shards better than gather on TPU for TP'd vocab
+    return jnp.take(p['table'], ids, axis=0).astype(dtype)
+
+
+def embedding_logits(p: Params, x: jax.Array, dtype=None) -> jax.Array:
+    """Tied readout: x @ table^T."""
+    dtype = dtype or x.dtype
+    return jax.lax.dot_general(
+        x, p['table'].astype(dtype).T,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_layernorm(d: int) -> Params:
+    return {'scale': jnp.ones((d,), jnp.float32),
+            'bias': jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p['scale'] + p['bias']).astype(x.dtype)
+
+
+def init_rmsnorm(d: int) -> Params:
+    return {'scale': jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * p['scale']).astype(x.dtype)
+
+
+def init_groupnorm(channels: int) -> Params:
+    return {'scale': jnp.ones((channels,), jnp.float32),
+            'bias': jnp.zeros((channels,), jnp.float32)}
+
+
+def groupnorm(p: Params, x: jax.Array, groups: int = 32,
+              eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over NHWC (normalizes within channel groups; the paper's
+    broadband-MR normalization block)."""
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xf = x.astype(jnp.float32).reshape(N, H, W, g, C // g)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(N, H, W, C)
+    return (y * p['scale'] + p['bias']).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def swish(x: jax.Array) -> jax.Array:
+    """f(x) = x * sigmoid(x) — paper Eq. 5 (SOA sigmoid + MR product)."""
+    return x * jax.nn.sigmoid(x)
+
+
+silu = swish
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACTIVATIONS = {'swish': swish, 'silu': swish, 'gelu': gelu,
+               'relu': jax.nn.relu}
+
+
+# ---------------------------------------------------------------------------
+# Conv (NHWC, HWIO)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, kh: int, kw: int, c_in: int, c_out: int, *,
+              bias: bool = True) -> Params:
+    p = {'w': _fan_in_init(key, (kh, kw, c_in, c_out), kh * kw * c_in)}
+    if bias:
+        p['b'] = jnp.zeros((c_out,), jnp.float32)
+    return p
+
+
+def conv2d(p: Params, x: jax.Array, stride: int = 1,
+           padding: str = 'SAME') -> jax.Array:
+    y = jax.lax.conv_general_dilated(
+        x, p['w'].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=('NHWC', 'HWIO', 'NHWC'),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+    if 'b' in p:
+        y = y + p['b'].astype(x.dtype)
+    return y
+
+
+def conv_transpose2d(p: Params, x: jax.Array, stride: int = 2, *,
+                     sparse_dataflow: bool = True) -> jax.Array:
+    """Transposed conv; ``sparse_dataflow=True`` uses the zero-skipping
+    sub-pixel decomposition (paper §IV-C)."""
+    from repro.core import sparse_dataflow as sd
+    f = sd.conv_transpose_sparse if sparse_dataflow else sd.conv_transpose_dense
+    y = f(x, p['w'].astype(x.dtype), stride)
+    if 'b' in p:
+        y = y + p['b'].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, *, gated: bool = True,
+             bias: bool = False) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {'up': init_linear(ks[0], d, d_ff, bias=bias),
+         'down': init_linear(ks[1], d_ff, d, bias=bias)}
+    if gated:
+        p['gate'] = init_linear(ks[2], d, d_ff, bias=bias)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, act: str = 'swish',
+        quant: bool = False, tp_axis: str | None = 'model') -> jax.Array:
+    from repro.distributed.sharding import shard_hint
+    f = ACTIVATIONS[act]
+    up = linear(p['up'], x, quant=quant)
+    up = shard_hint(up, *(('dp',) + (None,) * (up.ndim - 2) + (tp_axis,)))
+    if 'gate' in p:
+        h = f(linear(p['gate'], x, quant=quant)) * up
+    else:
+        h = f(up)
+    return linear(p['down'], h, quant=quant)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def pad_vocab(vocab: int, multiple: int) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, 'size'))

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality) mixer layer.
+
+Chunked SSD: within a chunk the recurrence is computed as a (masked,
+decay-weighted) attention-like quadratic form; across chunks a small state
+(B, H, P, N) is carried by ``lax.scan`` — giving O(L) sequence scaling, which
+is what makes the ``long_500k`` cell runnable for this family.
+
+Decode is the pure recurrence: state' = state * exp(dt*A) + dt * (B outer x).
+
+The paper's attention-specific techniques (C2/C3) do not apply here
+(attention-free family — see DESIGN.md §4); C1 (W8A8) applies to the in/out
+projections.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return s, d_inner, n_heads
+
+
+def init_mamba(key, cfg: ArchConfig) -> Dict[str, Any]:
+    s, d_inner, H = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 5)
+    return {
+        # input projections kept separate (z / xBC / dt) so each output dim
+        # shards evenly over the tensor axis (a fused 2*d_inner+2GN+H dim
+        # is not divisible by the mesh)
+        'in_z': L.init_linear(ks[0], cfg.d_model, d_inner, bias=False),
+        'in_xbc': L.init_linear(ks[3], cfg.d_model, conv_dim, bias=False),
+        'in_dt': L.init_linear(ks[4], cfg.d_model, H, bias=False),
+        'conv_w': L.normal_init(ks[1], (s.d_conv, conv_dim), 0.02),
+        'conv_b': jnp.zeros((conv_dim,), jnp.float32),
+        'A_log': jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        'D': jnp.ones((H,), jnp.float32),
+        'dt_bias': jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, H).astype(jnp.float32))),
+        'norm': L.init_rmsnorm(d_inner),
+        'out_proj': L.init_linear(ks[2], d_inner, cfg.d_model, bias=False),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xBC (B, S, C), w (K, C).
+    ``state`` (B, K-1, C) carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)             # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(out + b), new_state
+
+
+def _ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, chunk: int,
+                 init_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """SSD over chunks.
+    x  (B, S, H, P)   dt (B, S, H)   A (H,) (negative)
+    Bm (B, S, G, N)   Cm (B, S, G, N);  H = G*rep.
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nC = x.shape[1] // Q
+    # chunk views: (B, nC, Q, ...) -> scan over nC
+    xc = x.reshape(B, nC, Q, H, P)
+    dtc = dt.reshape(B, nC, Q, H)
+    Bc = Bm.reshape(B, nC, Q, G, N)
+    Cc = Cm.reshape(B, nC, Q, G, N)
+    dA = dtc * A                                          # (B, nC, Q, H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+
+    state0 = (jnp.zeros((B, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def body(state, inp):
+        xq, dtq, bq, cq, dAq, cumq = inp                 # leading dim B
+        # decay from chunk start to position i: exp(cum_i)
+        # intra-chunk: attention-like with decay mask
+        #   L[i,j] = exp(cum_i - cum_j) * (j <= i)
+        li = cumq[:, :, None, :]                          # (B,Q,1,H)
+        lj = cumq[:, None, :, :]                          # (B,1,Q,H)
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        Lm = jnp.where(mask[None, :, :, None],
+                       jnp.exp(jnp.clip(li - lj, -60.0, 0.0)), 0.0)
+        # scores: C_i . B_j  per group -> (B, Q, Q, G)
+        s = jnp.einsum('bign,bjgn->bijg', cq, bq)
+        s = s[..., :, None].repeat(rep, axis=-1).reshape(B, Q, Q, H) * Lm
+        y_intra = jnp.einsum('bijh,bjh,bjhp->bihp', s, dtq, xq)
+        # inter-chunk: y += C_i . state * exp(cum_i)
+        cqh = cq[:, :, :, None, :].repeat(rep, axis=3).reshape(B, Q, H, N)
+        decay_i = jnp.exp(jnp.clip(cumq, -60.0, 0.0))     # (B,Q,H)
+        y_inter = jnp.einsum('bihn,bhpn,bih->bihp', cqh, state, decay_i)
+        # state update: state' = state*exp(cum_end) + sum_j exp(cum_end-cum_j) dt_j B_j x_j
+        cum_end = cumq[:, -1, :]                          # (B,H)
+        decay_out = jnp.exp(jnp.clip(cum_end[:, None, :] - cumq, -60.0, 0.0))
+        bqh = bq[:, :, :, None, :].repeat(rep, axis=3).reshape(B, Q, H, N)
+        new_state = state * jnp.exp(jnp.clip(cum_end, -60.0, 0.0)
+                                    )[:, :, None, None] + \
+            jnp.einsum('bjh,bjhn,bjhp->bhpn', dtq * decay_out, bqh, xq)
+        return new_state, y_intra + y_inter
+
+    inputs = tuple(jnp.moveaxis(a, 1, 0) for a in
+                   (xc, dtc, Bc, Cc, dA.reshape(B, nC, Q, H),
+                    cum))
+    final_state, ys = jax.lax.scan(body, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nC * Q, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba(p: Dict[str, Any], cfg: ArchConfig, x: jax.Array, *,
+          cache: Optional[Dict[str, jax.Array]] = None,
+          quant: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """x (B, S, d).  cache = {'conv': (B, K-1, conv_dim),
+    'state': (B, H, P, N)} for decode (S == 1) / chunk-streamed prefill."""
+    s, d_inner, H = _dims(cfg)
+    B, S, d = x.shape
+    G, N, P = s.n_groups, s.d_state, s.headdim
+    from repro.distributed.sharding import shard_hint
+    tp = 'model' if cfg.model_axis_tp else None
+    x = shard_hint(x, 'dp', None, None)
+    z = shard_hint(L.linear(p['in_z'], x, quant=quant), 'dp', None, tp)
+    xBC = shard_hint(L.linear(p['in_xbc'], x, quant=quant), 'dp', None, tp)
+    dt = L.linear(p['in_dt'], x, quant=quant)
+    conv_state = None if cache is None else cache['conv']
+    xBC, new_conv = _causal_conv(xBC, p['conv_w'].astype(xBC.dtype),
+                                 p['conv_b'].astype(xBC.dtype), conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xh = xs.reshape(B, S, H, P).astype(jnp.float32)
+    Bm = Bm.reshape(B, S, G, N).astype(jnp.float32)
+    Cm = Cm.reshape(B, S, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'])  # (B,S,H)
+    A = -jnp.exp(p['A_log'])                              # (H,) negative
+
+    if cache is not None and S == 1:
+        # pure recurrence (decode)
+        dA = jnp.exp(dt[:, 0] * A)                        # (B,H)
+        rep = H // G
+        bqh = Bm[:, 0, :, None, :].repeat(rep, 2).reshape(B, H, N)
+        cqh = Cm[:, 0, :, None, :].repeat(rep, 2).reshape(B, H, N)
+        state = cache['state'].astype(jnp.float32)
+        state = state * dA[:, :, None, None] + \
+            jnp.einsum('bh,bhn,bhp->bhpn', dt[:, 0], bqh, xh[:, 0])
+        y = jnp.einsum('bhn,bhpn->bhp', cqh, state)[:, None]  # (B,1,H,P)
+        final_state = state
+    else:
+        init_state = None if cache is None else cache['state']
+        y, final_state = _ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, init_state)
+    y = y + xh * p['D'][:, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p['norm'], y * jax.nn.silu(z))
+    out = L.linear(p['out_proj'], y, quant=quant)
+    new_cache = None
+    if cache is not None:
+        new_cache = {'conv': new_conv.astype(cache['conv'].dtype),
+                     'state': final_state.astype(cache['state'].dtype)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int,
+                     dtype=jnp.float32) -> Dict[str, jax.Array]:
+    s, d_inner, H = _dims(cfg)
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return {
+        'conv': jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        'state': jnp.zeros((batch, H, s.headdim, s.d_state), dtype),
+    }

@@ -1,0 +1,249 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid / VLM families.
+
+Layers are scanned (stacked params, ``lax.scan``) so HLO size and compile
+time are O(1) in depth — mandatory for the 88-layer dry-run cells — with a
+configurable remat policy on the scan body.
+
+Families:
+  dense | moe | vlm : homogeneous [attn + (mlp|moe)] blocks
+  ssm               : homogeneous [mamba] blocks (no separate FFN)
+  hybrid            : scanned *super-blocks*; within a super-block the
+                      (attention/mamba, dense/moe) pattern of
+                      cfg.hybrid_block / cfg.hybrid_ffn is unrolled
+                      (jamba: 1 attn : 7 mamba, MoE every other FFN)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.attention import (attention, init_attention,
+                                    init_attention_cache, init_mla,
+                                    init_mla_cache, mla_attention)
+
+NORMS = {'rmsnorm': (L.init_rmsnorm, L.rmsnorm),
+         'layernorm': (L.init_layernorm, L.layernorm)}
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_kinds(cfg: ArchConfig):
+    """Per-sub-layer (mixer, ffn) kinds within one scanned unit."""
+    if cfg.family == 'hybrid':
+        return tuple(zip(cfg.hybrid_block, cfg.hybrid_ffn))
+    if cfg.family == 'ssm':
+        return (('M', '-'),)
+    mixer = 'L' if cfg.mla is not None else 'A'
+    ffn = 'E' if (cfg.moe is not None and cfg.moe.every == 1) else 'D'
+    return ((mixer, ffn),)
+
+
+def n_scan_steps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // len(_block_kinds(cfg))
+
+
+def init_block(key, cfg: ArchConfig) -> Dict[str, Any]:
+    """One scanned unit (possibly several sub-layers for hybrids)."""
+    init_norm = NORMS[cfg.norm][0]
+    p = {}
+    ks = jax.random.split(key, len(_block_kinds(cfg)))
+    for i, (mixer, ffn) in enumerate(_block_kinds(cfg)):
+        k1, k2 = jax.random.split(ks[i])
+        sub = {'mix_norm': init_norm(cfg.d_model)}
+        if mixer == 'A':
+            sub['attn'] = init_attention(k1, cfg)
+        elif mixer == 'L':
+            sub['attn'] = init_mla(k1, cfg)
+        elif mixer == 'M':
+            sub['mamba'] = SSM.init_mamba(k1, cfg)
+        if ffn == 'D':
+            sub['ffn_norm'] = init_norm(cfg.d_model)
+            sub['mlp'] = L.init_mlp(k2, cfg.d_model, cfg.d_ff,
+                                    gated=(cfg.act in ('swish', 'silu')),
+                                    bias=cfg.mlp_bias)
+        elif ffn == 'E':
+            sub['ffn_norm'] = init_norm(cfg.d_model)
+            sub['moe'] = MOE.init_moe(k2, cfg)
+        p[f'sub{i}'] = sub
+    return p
+
+
+def apply_block(p, cfg: ArchConfig, x: jax.Array, *,
+                cache: Optional[Dict] = None,
+                cache_pos=None, pos=None,
+                quant: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    norm = NORMS[cfg.norm][1]
+    new_cache = {} if cache is not None else None
+    for i, (mixer, ffn) in enumerate(_block_kinds(cfg)):
+        sub = p[f'sub{i}']
+        sub_cache = None if cache is None else cache[f'sub{i}']
+        h = norm(sub['mix_norm'], x)
+        if mixer == 'A':
+            h, nc = attention(sub['attn'], cfg, h, pos=pos, cache=sub_cache,
+                              cache_pos=cache_pos, quant=quant)
+        elif mixer == 'L':
+            h, nc = mla_attention(sub['attn'], cfg, h, pos=pos,
+                                  cache=sub_cache, cache_pos=cache_pos,
+                                  quant=quant)
+        else:  # mamba
+            h, nc = SSM.mamba(sub['mamba'], cfg, h, cache=sub_cache,
+                              quant=quant)
+        x = x + h
+        if ffn != '-':
+            h = norm(sub['ffn_norm'], x)
+            if ffn == 'E':
+                h = MOE.moe_ffn(sub['moe'], cfg, h, quant=quant)
+            else:
+                h = L.mlp(sub['mlp'], h, act=cfg.act, quant=quant,
+                          tp_axis='model' if cfg.model_axis_tp else None)
+            x = x + h
+        if new_cache is not None:
+            new_cache[f'sub{i}'] = nc if nc is not None else sub_cache
+    return x, new_cache
+
+
+def init_block_cache(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    c = {}
+    for i, (mixer, _) in enumerate(_block_kinds(cfg)):
+        if mixer == 'A':
+            c[f'sub{i}'] = init_attention_cache(cfg, batch, max_len, dtype)
+        elif mixer == 'L':
+            c[f'sub{i}'] = init_mla_cache(cfg, batch, max_len, dtype)
+        else:
+            c[f'sub{i}'] = SSM.init_mamba_cache(cfg, batch)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# full LM
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ArchConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    steps = n_scan_steps(cfg)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(
+        jax.random.split(ks[0], steps))
+    p = {
+        'embed': L.init_embedding(ks[1], cfg.vocab, cfg.d_model),
+        'blocks': blocks,
+        'final_norm': NORMS[cfg.norm][0](cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p['lm_head'] = L.init_linear(ks[2], cfg.d_model, cfg.vocab,
+                                     bias=False, stddev=0.02)
+    return p
+
+
+def _readout(p, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    from repro.distributed.sharding import shard_hint
+    x = NORMS[cfg.norm][1](p['final_norm'], x)
+    logits = (L.embedding_logits(p['embed'], x) if cfg.tie_embeddings
+              else L.linear(p['lm_head'], x))
+    return shard_hint(logits, 'dp', None, 'model')
+
+
+def _scan_blocks(p, cfg: ArchConfig, x: jax.Array, *, cache=None,
+                 cache_pos=None, pos=None, quant=False):
+    """Scan the stacked blocks; cache (if any) is scanned in/out."""
+
+    def body(carry, inp):
+        h = carry
+        blk, blk_cache = inp
+        h, new_cache = apply_block(blk, cfg, h, cache=blk_cache,
+                                   cache_pos=cache_pos, pos=pos, quant=quant)
+        return h, new_cache
+
+    if cfg.remat == 'full':
+        body = jax.checkpoint(body)
+    elif cfg.remat == 'dots':
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+    if cfg.unroll_layers:     # dry-run cost probes (see ArchConfig)
+        steps = n_scan_steps(cfg)
+        at = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+        new_caches = []
+        for i in range(steps):
+            x, nc = body(x, (at(p['blocks'], i),
+                             None if cache is None else at(cache, i)))
+            new_caches.append(nc)
+        if cache is None:
+            return x, None
+        return x, jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *new_caches)
+    if cache is None:
+        x, _ = jax.lax.scan(lambda c, b: body(c, (b, None)), x, p['blocks'])
+        return x, None
+    x, new_cache = jax.lax.scan(body, x, (p['blocks'], cache))
+    return x, new_cache
+
+
+def lm_apply(p, cfg: ArchConfig, tokens: jax.Array, *,
+             dtype=jnp.float32, pos: Optional[jax.Array] = None,
+             inputs_embeds: Optional[jax.Array] = None,
+             quant: bool = False) -> jax.Array:
+    """tokens (B, S) -> logits (B, S, vocab).  ``inputs_embeds`` overrides
+    the embedding lookup (modality-frontend stubs)."""
+    from repro.distributed.sharding import shard_hint
+    x = (L.embedding(p['embed'], tokens, dtype) if inputs_embeds is None
+         else inputs_embeds.astype(dtype))
+    x = shard_hint(x, 'dp', None, None)
+    x, _ = _scan_blocks(p, cfg, x, pos=pos, quant=quant)
+    return _readout(p, cfg, x)
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    steps = n_scan_steps(cfg)
+    caches = [init_block_cache(cfg, batch, max_len, dtype)
+              for _ in range(steps)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches)
+
+
+def lm_prefill(p, cfg: ArchConfig, tokens: jax.Array, cache, *,
+               dtype=jnp.bfloat16, quant: bool = False):
+    """Fill the cache with a prompt; returns (last-token logits, cache)."""
+    x = L.embedding(p['embed'], tokens, dtype)
+    x, cache = _scan_blocks(p, cfg, x, cache=cache,
+                            cache_pos=jnp.int32(0), quant=quant)
+    return _readout(p, cfg, x[:, -1:]), cache
+
+
+def lm_decode(p, cfg: ArchConfig, token: jax.Array, cache,
+              pos_scalar: jax.Array, *, dtype=jnp.bfloat16,
+              quant: bool = False):
+    """One decode step.  token (B, 1); pos_scalar = current length."""
+    x = L.embedding(p['embed'], token, dtype)
+    x, cache = _scan_blocks(p, cfg, x, cache=cache, cache_pos=pos_scalar,
+                            quant=quant)
+    return _readout(p, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(p, cfg: ArchConfig, tokens: jax.Array, labels: jax.Array, *,
+            dtype=jnp.float32, real_vocab: Optional[int] = None,
+            inputs_embeds=None) -> jax.Array:
+    """Causal cross-entropy; padded vocab rows masked.  labels == -1 ignored."""
+    logits = lm_apply(p, cfg, tokens, dtype=dtype,
+                      inputs_embeds=inputs_embeds).astype(jnp.float32)
+    if real_vocab is not None and real_vocab < cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab) < real_vocab
+        logits = jnp.where(pad_mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,62 @@
+"""Gradient accumulation: split the global batch into microbatches inside
+one jitted step (`lax.scan` over microbatches, so activation memory is that
+of ONE microbatch while the optimizer sees the full-batch gradient).
+
+This is the memory-side knob complementing the remat policy: at the
+1000-node scale it lets the same global batch run on fewer/healthier hosts
+after an elastic re-mesh (the per-device microbatch shrinks instead of the
+global batch changing, keeping training curves comparable).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def build_accum_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
+                           accum_steps: int,
+                           real_vocab: Optional[int] = None,
+                           dtype=jnp.bfloat16) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+    batch dims must be divisible by accum_steps; microbatches are scanned
+    and gradients averaged before one optimizer update."""
+
+    def loss_fn(p, mb):
+        if cfg.family == 'encdec':
+            return ED.encdec_loss(p, cfg, mb['frames'], mb['tokens'],
+                                  mb['labels'], dtype=dtype,
+                                  real_vocab=real_vocab)
+        return T.lm_loss(p, cfg, mb['tokens'], mb['labels'], dtype=dtype,
+                         real_vocab=real_vocab)
+
+    def train_step(params, opt_state, batch):
+        B = batch['tokens'].shape[0]
+        assert B % accum_steps == 0, (B, accum_steps)
+        mb_size = B // accum_steps
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum_steps, mb_size) + x.shape[1:]),
+            batch)
+
+        def body(carry, mb):
+            g_acc, l_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                g_acc, grads)
+            return (g_acc, l_acc + loss / accum_steps), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(body, (zeros, 0.0), micro)
+        new_params, new_opt, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                  params)
+        return new_params, new_opt, {'loss': loss, 'grad_norm': gnorm}
+
+    return train_step

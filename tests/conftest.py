@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Keep tests single-device (the dry-run sets its own device count in a
+# subprocess).  Force deterministic, quiet CPU execution.
+os.environ.setdefault('JAX_PLATFORMS', 'cpu')
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), '..', 'src'))

@@ -1,0 +1,124 @@
+"""DiffLight simulator tests: Table II constants, loss budget, workload
+extraction, and the paper's headline claims (Fig. 8 ablation, Figs. 9-10
+ratios, DSE)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.diffusion import PAPER_MODELS
+from repro.core.photonic import devices as dev
+from repro.core.photonic.arch import (BASELINE, PAPER_OPTIMUM,
+                                      DiffLightConfig, dse_space)
+from repro.core.photonic.baselines import (EPB_IMPROVEMENT,
+                                           GOPS_IMPROVEMENT,
+                                           derive_baselines)
+from repro.core.photonic.simulator import ablation, dse_score, simulate
+from repro.core.photonic.workload import unet_workload
+
+
+def _workloads():
+    return {n: unet_workload(c, ctx_len=77 if c.context_dim else None)
+            for n, c in PAPER_MODELS.items()}
+
+
+def test_table2_constants():
+    assert dev.EO_TUNING.latency == 20e-9
+    assert dev.ADC_8B.latency == pytest.approx(0.82e-9)
+    assert dev.DAC_8B.power == pytest.approx(3e-3)
+    assert dev.LUT.power == pytest.approx(4.21e-3)
+    assert len(dev.TABLE_II) == 10
+
+
+def test_wdm_limit_enforced():
+    with pytest.raises(AssertionError):
+        dev.path_loss_db(40)
+    cfg = DiffLightConfig(N=48)
+    with pytest.raises(AssertionError):
+        cfg.validate()
+
+
+def test_laser_power_factor_positive():
+    f = dev.laser_power_factor(36)
+    assert 1.0 < f < 10.0     # a few dB of loss
+
+
+def test_workload_positive_and_convt_share():
+    for name, w in _workloads().items():
+        assert w.total_macs_dense > 0
+        assert 0.05 < w.convt_macs / w.total_macs_dense < 0.5, name
+        assert w.softmax_elems > 0
+        # sparse dataflow strictly reduces MACs
+        assert w.total_macs(True) < w.total_macs(False)
+
+
+def test_workload_matches_analytic_unet():
+    """Cross-check the walker against a hand-computed tiny UNet."""
+    from repro.models.unet import UNetConfig
+    cfg = UNetConfig('t', img_size=8, in_ch=1, base_ch=8, ch_mults=(1,),
+                     n_res_blocks=1, attn_resolutions=(), n_heads=1)
+    w = unet_workload(cfg, ctx_len=None)
+    # conv_in 9*1*8*64 + res (9*8*8*64)*2 + mid 2 res (9*8*8*64)*2
+    # + up res (9*16*8*64 + skips...) -- just assert the closed form pieces
+    assert w.conv_macs > 9 * 1 * 8 * 64
+    assert w.convt_macs == 0          # single level -> no upsample
+
+
+def test_fig8_ablation_3x():
+    """Headline: combined optimizations ~3x energy vs baseline (Fig. 8)."""
+    ratios = []
+    for name, w in _workloads().items():
+        ab = ablation(w)
+        r = ab['baseline'].energy_j / ab['combined'].energy_j
+        ratios.append(r)
+        # each individual optimization helps
+        for k in ('sw_opt', 'pipelined', 'dac_sharing'):
+            assert ab[k].energy_j < ab['baseline'].energy_j, (name, k)
+    avg = float(np.mean(ratios))
+    assert avg >= 3.0, ratios          # paper: "3x reduction on average"
+    assert avg < 5.0                   # sanity: same order as the paper
+
+
+def test_fig9_fig10_claimed_ratios():
+    """DiffLight >= 5.5x GOPS and >= 3x lower EPB vs best baseline."""
+    ws = _workloads()
+    reps = [simulate(w, PAPER_OPTIMUM) for w in ws.values()]
+    gops = float(np.mean([r.gops for r in reps]))
+    epb = float(np.mean([r.epb_pj for r in reps]))
+    base = derive_baselines(gops, epb)
+    best_gops = max(b.gops for b in base.values())
+    best_epb = min(b.epb_pj for b in base.values())
+    assert gops / best_gops >= 5.5 * 0.999
+    assert best_epb / epb >= 3.0 * 0.999
+
+
+def test_pipelining_improves_throughput():
+    w = list(_workloads().values())[0]
+    pip = simulate(w, dataclasses.replace(BASELINE, pipelined=True))
+    assert pip.gops > simulate(w, BASELINE).gops
+
+
+def test_sparse_dataflow_improves_gops_not_ops():
+    w = list(_workloads().values())[0]
+    a = simulate(w, BASELINE)
+    b = simulate(w, dataclasses.replace(BASELINE, sparse_dataflow=True))
+    assert b.latency_s < a.latency_s
+    assert a.ops == b.ops             # nominal ops unchanged (zero-skipping)
+
+
+def test_dse_paper_config_valid_and_competitive():
+    """Paper's [4,12,3,6,6,3] is WDM-valid and lands in the top half of the
+    budget-constrained space under our calibrated cost model (EXPERIMENTS.md
+    reports the exact percentile)."""
+    PAPER_OPTIMUM.validate()
+    w = unet_workload(PAPER_MODELS['sd_v1_4'], ctx_len=77)
+
+    def mr_count(c):
+        return (c.Y * 2 * c.K * c.N + c.H * (4 * c.M * c.L + 3 * c.M * c.N)
+                + 2 * c.M * c.L)
+    budget = 1.1 * mr_count(PAPER_OPTIMUM)
+    scores = sorted((dse_score(w, c) for c in dse_space()
+                     if mr_count(c) <= budget), reverse=True)
+    mine = dse_score(w, PAPER_OPTIMUM)
+    pct = np.searchsorted(-np.asarray(scores), -mine) / len(scores)
+    assert pct < 0.6, pct
