@@ -43,11 +43,10 @@ class DiffusionPipeline:
         """DDIM sampling with the DeepCache baseline ([21]): a full UNet
         pass every `interval` steps, shallow passes in between (deep
         features reused).  Python-level step loop (two jitted variants)."""
-        import numpy as np
         from repro.diffusion.deepcache import unet_apply_cached
         import jax as _jax
         sched = self.sched
-        ts = np.linspace(sched.T - 1, 0, steps).astype(int)
+        ts = samplers.ddim_timesteps(sched, steps)
         shape = self.sample_shape(batch)
         k0, key = jax.random.split(key)
         x = jax.random.normal(k0, shape)
@@ -62,11 +61,8 @@ class DiffusionPipeline:
                 eps, cache = full(self.unet_params, x, tb, context)
             else:
                 eps, _ = shallow(self.unet_params, x, tb, cache, context)
-            ab_t = sched.alpha_bars[int(t)]
             t_prev = int(ts[i + 1]) if i + 1 < steps else -1
-            ab_prev = sched.alpha_bars[t_prev] if t_prev >= 0 else 1.0
-            x0_pred = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
-            x = jnp.sqrt(ab_prev) * x0_pred + jnp.sqrt(1 - ab_prev) * eps
+            x = samplers.ddim_step(sched, eps, x, int(t), t_prev)
         if self.vae_params is not None:
             x = AE.vae_decode(self.vae_params, self.vae_cfg, x)
         return x
@@ -85,6 +81,14 @@ class DiffusionPipeline:
     def sample_shape(self, batch: int):
         c = self.unet_cfg
         return (batch, c.img_size, c.img_size, c.in_ch)
+
+    def denoise_step(self, x: jax.Array, t: jax.Array, t_prev: jax.Array,
+                     context=None, guidance: float = 0.0) -> jax.Array:
+        """One mixed-timestep DDIM step: `t` / `t_prev` are per-sample
+        (B,) vectors, so a batch may hold samples at different denoising
+        depths (the serving engine's per-tick kernel)."""
+        eps = self._eps_fn(context, guidance)(x, jnp.asarray(t, jnp.int32))
+        return samplers.ddim_step(self.sched, eps, x, t, t_prev)
 
     def generate(self, key, batch: int, steps: int = 50,
                  sampler: str = 'ddim', context=None,

@@ -5,6 +5,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.diffusion.schedule import Schedule
 
@@ -43,11 +44,51 @@ def ddpm_sample(sched: Schedule, eps_fn: EpsFn, shape, key: jax.Array,
     return x0
 
 
+def ddim_timesteps(sched: Schedule, steps: int) -> np.ndarray:
+    """The uniform DDIM sub-sequence of `steps` timesteps (T-1 ... 0).
+
+    Computed host-side (numpy): the serving engine builds per-request
+    trajectories on the admission path, where an eager jnp.linspace would
+    trigger one XLA compile per distinct `steps` value.  Both the batch
+    sampler and the engine read this single source, so their timestep
+    sequences agree by construction.
+    """
+    return np.linspace(sched.T - 1, 0, steps).astype(np.int32)
+
+
+def ddim_step(sched: Schedule, eps: jax.Array, x: jax.Array, t: jax.Array,
+              t_prev: jax.Array, eta: float = 0.0,
+              key: Optional[jax.Array] = None) -> jax.Array:
+    """One DDIM update x_t -> x_{t_prev}, given the predicted noise `eps`.
+
+    Vectorizes over *per-sample* timesteps: `t` / `t_prev` may be scalars or
+    (B,) int vectors, so samples at different denoising depths share one
+    call (the continuous-batching engine's mixed-timestep step).  A
+    `t_prev < 0` entry means "step to x_0" (alpha_bar_prev = 1).
+    """
+    B = x.shape[0]
+    bshape = (B,) + (1,) * (x.ndim - 1)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    t_prev = jnp.broadcast_to(jnp.asarray(t_prev, jnp.int32), (B,))
+    ab_t = sched.alpha_bars[t].reshape(bshape)
+    ab_prev = jnp.where(t_prev >= 0,
+                        sched.alpha_bars[jnp.maximum(t_prev, 0)],
+                        1.0).reshape(bshape)
+    x0_pred = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    sigma = eta * jnp.sqrt((1 - ab_prev) / (1 - ab_t)) * \
+        jnp.sqrt(1 - ab_t / ab_prev)
+    x_prev = jnp.sqrt(ab_prev) * x0_pred + \
+        jnp.sqrt(jnp.maximum(1 - ab_prev - sigma ** 2, 0.0)) * eps
+    if key is not None:
+        x_prev = x_prev + sigma * jax.random.normal(key, x.shape, x.dtype)
+    return x_prev
+
+
 def ddim_sample(sched: Schedule, eps_fn: EpsFn, shape, key: jax.Array,
                 steps: int = 50, eta: float = 0.0,
                 dtype=jnp.float32) -> jax.Array:
     """DDIM with a uniform sub-sequence of `steps` timesteps."""
-    ts = jnp.linspace(sched.T - 1, 0, steps).astype(jnp.int32)
+    ts = jnp.asarray(ddim_timesteps(sched, steps))
     k0, kloop = jax.random.split(key)
     x = jax.random.normal(k0, shape, dtype)
 
@@ -58,18 +99,8 @@ def ddim_sample(sched: Schedule, eps_fn: EpsFn, shape, key: jax.Array,
                            -1)
         B = x.shape[0]
         eps = eps_fn(x, jnp.full((B,), t, jnp.int32))
-        ab_t = sched.alpha_bars[t]
-        ab_prev = jnp.where(t_prev >= 0,
-                            sched.alpha_bars[jnp.maximum(t_prev, 0)], 1.0)
-        x0_pred = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
-        sigma = eta * jnp.sqrt((1 - ab_prev) / (1 - ab_t)) * \
-            jnp.sqrt(1 - ab_t / ab_prev)
         k, ks = jax.random.split(k)
-        z = jax.random.normal(ks, x.shape, x.dtype)
-        x_prev = jnp.sqrt(ab_prev) * x0_pred + \
-            jnp.sqrt(jnp.maximum(1 - ab_prev - sigma ** 2, 0.0)) * eps + \
-            sigma * z
-        return x_prev, k
+        return ddim_step(sched, eps, x, t, t_prev, eta=eta, key=ks), k
 
     x0, _ = jax.lax.fori_loop(0, steps, body, (x, kloop))
     return x0

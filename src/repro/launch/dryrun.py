@@ -171,6 +171,15 @@ def _compile_cell(cfg, shape, mesh, **kw):
     return compiled
 
 
+def _cost_dict(compiled) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions: older
+    releases return a per-device list of dicts, newer ones a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _scan_units(cfg: ArchConfig) -> int:
     if cfg.family == 'encdec':
         return 1
@@ -196,7 +205,7 @@ def cost_probe(cfg: ArchConfig, shape: ShapeConfig, mesh,
             pc = dc.replace(cfg, n_layers=U * mult, unroll_layers=True)
             steps_full = cfg.n_layers // U
         compiled = _compile_cell(pc, shape, mesh, **kw)
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         coll = parse_collectives(compiled.as_text())
         vals.append((float(cost.get('flops', 0.0)),
                      float(cost.get('bytes accessed', 0.0)),
@@ -224,7 +233,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
     compiled = _compile_cell(cfg, shape, mesh, **kw)
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     probe = (cost_probe(cfg, shape, mesh, **kw) if with_probe else {
@@ -241,8 +250,14 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         'memory': {
             'argument_bytes': int(getattr(mem, 'argument_size_in_bytes', 0)),
             'output_bytes': int(getattr(mem, 'output_size_in_bytes', 0)),
+            # newer jaxlib drops peak_memory_in_bytes; approximate with
+            # args + outputs + temporaries + generated code
             'peak_bytes_per_device': int(
-                getattr(mem, 'peak_memory_in_bytes', 0)),
+                getattr(mem, 'peak_memory_in_bytes', 0) or
+                (getattr(mem, 'argument_size_in_bytes', 0) +
+                 getattr(mem, 'output_size_in_bytes', 0) +
+                 getattr(mem, 'temp_size_in_bytes', 0) +
+                 getattr(mem, 'generated_code_size_in_bytes', 0))),
         },
         'cost': probe,
         'collectives_scanned_body': coll,

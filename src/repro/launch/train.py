@@ -50,9 +50,15 @@ class Trainer:
             self.params = jax.device_put(params, self.p_shardings)
             self.opt = jax.device_put(opt, self.o_shardings)
         step_fn = ST.build_train_step(cfg, opt_cfg, real_vocab, dtype=dtype)
+        # Pin outputs to the same shardings as the inputs: without
+        # out_shardings XLA is free to re-layout the updated params (it
+        # reshards small stacked leaves over 'data'), which both triggers
+        # involuntary full rematerializations inside the partitioner and
+        # makes the second call fail the committed-arg sharding check.
         self.step_fn = jax.jit(
             step_fn,
             in_shardings=(self.p_shardings, self.o_shardings, None),
+            out_shardings=(self.p_shardings, self.o_shardings, None),
             donate_argnums=(0, 1))
         self.start_step = 0
 

@@ -1,0 +1,24 @@
+"""Continuous-batching diffusion serving with photonic energy accounting.
+
+Quickstart::
+
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), unet_cfg)
+    engine = ContinuousBatchingEngine(pipe, slots=8)
+    engine.warmup()
+    engine.submit(GenerationRequest(request_id=0, seed=42, steps=50))
+    while engine.busy:
+        for result in engine.tick():
+            ...  # result.image, result.latency_s, result.energy_j
+"""
+from repro.serving.api import GenerationRequest, GenerationResult
+from repro.serving.batcher import (Bucket, BucketRouter, bucket_for,
+                                   choose_slots)
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.metrics import PhotonicAccountant, ServingMetrics
+from repro.serving.queue import AdmissionQueue
+
+__all__ = [
+    'GenerationRequest', 'GenerationResult', 'ContinuousBatchingEngine',
+    'AdmissionQueue', 'ServingMetrics', 'PhotonicAccountant',
+    'Bucket', 'BucketRouter', 'bucket_for', 'choose_slots',
+]

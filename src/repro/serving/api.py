@@ -1,0 +1,63 @@
+"""Request/response surface of the continuous-batching serving engine.
+
+A ``GenerationRequest`` is one user's image: its own seed, its own DDIM
+step count, its own guidance scale and an optional latency SLO.  The
+engine multiplexes many of these into fixed-shape UNet step calls; a
+``GenerationResult`` carries the decoded image plus the per-request
+latency breakdown and the photonic energy the DiffLight simulator
+attributes to exactly this request's denoising work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationRequest:
+    """One image-generation request.
+
+    ``arrival_time`` is the request's nominal arrival on the serving
+    clock (seconds; used by trace replay).  ``priority``: larger values
+    are admitted first; FIFO within a class.  ``slo_ms``: optional
+    end-to-end latency objective — violations are tallied in the
+    metrics, never enforced by dropping work.
+    """
+    request_id: int
+    seed: int
+    steps: int = 50
+    guidance: float = 0.0
+    priority: int = 0
+    arrival_time: float = 0.0
+    slo_ms: Optional[float] = None
+
+    def __post_init__(self):
+        if self.steps < 1:
+            raise ValueError(f'request {self.request_id}: steps must be >=1')
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """Completed request: image plus timing and energy accounting."""
+    request_id: int
+    image: np.ndarray
+    steps: int
+    submit_time: float
+    start_time: float
+    finish_time: float
+    energy_j: float = 0.0          # simulated DiffLight energy, this request
+    epb_pj: float = 0.0            # energy-per-bit of the same workload
+
+    @property
+    def queue_delay_s(self) -> float:
+        return self.start_time - self.submit_time
+
+    @property
+    def service_s(self) -> float:
+        return self.finish_time - self.start_time
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.submit_time

@@ -1,0 +1,83 @@
+"""Bucketing and slot-count policy.
+
+A fixed-shape engine can only multiplex requests that agree on the
+latent shape and model, so a fleet keys engines by ``Bucket`` —
+(model name, resolution, channels).  ``choose_slots`` sizes an engine's
+slot buffer from the offered load via Little's law: the steady-state
+number of in-flight requests is arrival_rate x service_time; headroom
+comes from the target utilization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.serving.api import GenerationRequest, GenerationResult
+from repro.serving.engine import ContinuousBatchingEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    model: str
+    img_size: int
+    in_ch: int
+
+
+def bucket_for(unet_cfg) -> Bucket:
+    return Bucket(unet_cfg.name, unet_cfg.img_size, unet_cfg.in_ch)
+
+
+def choose_slots(arrival_rate_hz: float, step_time_s: float,
+                 mean_steps: float, target_util: float = 0.8,
+                 max_slots: int = 64) -> int:
+    """Little's law slot sizing: L = lambda x W, W ~ steps x step_time.
+
+    Returns the slot count that keeps expected occupancy at
+    ``target_util`` of the buffer, clamped to [1, max_slots].
+    """
+    if arrival_rate_hz <= 0 or step_time_s <= 0 or mean_steps <= 0:
+        return 1
+    in_flight = arrival_rate_hz * mean_steps * step_time_s
+    return max(1, min(max_slots, math.ceil(in_flight / target_util)))
+
+
+class BucketRouter:
+    """Routes requests to per-bucket engines and drives them together."""
+
+    def __init__(self):
+        self._engines: Dict[Bucket, ContinuousBatchingEngine] = {}
+
+    def register(self, engine: ContinuousBatchingEngine) -> Bucket:
+        b = bucket_for(engine.pipe.unet_cfg)
+        if b in self._engines:
+            raise ValueError(f'bucket {b} already registered')
+        self._engines[b] = engine
+        return b
+
+    def engine(self, bucket: Bucket) -> ContinuousBatchingEngine:
+        return self._engines[bucket]
+
+    @property
+    def buckets(self) -> List[Bucket]:
+        return list(self._engines)
+
+    @property
+    def busy(self) -> bool:
+        return any(e.busy for e in self._engines.values())
+
+    def submit(self, req: GenerationRequest, bucket: Optional[Bucket] = None,
+               now: Optional[float] = None) -> bool:
+        """Route to `bucket`, or to the single registered engine."""
+        if bucket is None:
+            if len(self._engines) != 1:
+                raise ValueError('ambiguous routing: specify a bucket '
+                                 f'({len(self._engines)} registered)')
+            bucket = next(iter(self._engines))
+        return self._engines[bucket].submit(req, now=now)
+
+    def tick(self, now: Optional[float] = None) -> List[GenerationResult]:
+        out: List[GenerationResult] = []
+        for e in self._engines.values():
+            out.extend(e.tick(now))
+        return out

@@ -1,0 +1,139 @@
+"""Serving metrics and per-request photonic energy accounting.
+
+``PhotonicAccountant`` scales the UNet per-step operation counts
+(``core/photonic/workload.py``) by the number of UNet evaluations a
+request consumed (its DDIM steps, doubled under classifier-free
+guidance) and runs them through ``simulator.simulate`` — so every
+completed request reports the Joules DiffLight would have burned on it
+and the corresponding energy-per-bit.
+
+``ServingMetrics`` keeps the queue/latency ledger: p50/p95 latency,
+requests/s over the completed window, tick/occupancy counters and SLO
+violations.  All counters are monotone in completed work.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.serving.api import GenerationResult
+
+
+class PhotonicAccountant:
+    """Per-request DiffLight energy: workload counts x simulate()."""
+
+    def __init__(self, unet_cfg, arch_cfg=None, ctx_len: Optional[int] = 77):
+        from repro.core.photonic.arch import PAPER_OPTIMUM
+        from repro.core.photonic.workload import unet_workload
+        self.arch_cfg = arch_cfg or PAPER_OPTIMUM
+        self._per_step = unet_workload(
+            unet_cfg, ctx_len=ctx_len if unet_cfg.context_dim else None)
+        self._cache: Dict[int, 'object'] = {}
+
+    def report(self, steps: int, guided: bool = False):
+        """SimReport for one request: `steps` UNet evaluations (2x when
+        classifier-free guidance runs the conditional + unconditional
+        pass per step)."""
+        from repro.core.photonic.simulator import simulate
+        n_evals = steps * (2 if guided else 1)
+        if n_evals not in self._cache:
+            self._cache[n_evals] = simulate(
+                self._per_step.scale(n_evals), self.arch_cfg,
+                name=f'{self._per_step.name}/x{n_evals}')
+        return self._cache[n_evals]
+
+    def energy(self, steps: int, guided: bool = False):
+        rep = self.report(steps, guided)
+        return rep.energy_j, rep.epb_pj
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    submitted: int
+    completed: int
+    ticks: int
+    unet_steps: int              # slot-steps of UNet work executed
+    active_slots: int
+    queued: int
+    p50_latency_s: float
+    p95_latency_s: float
+    requests_per_s: float
+    total_energy_j: float
+    slo_violations: int
+
+
+class ServingMetrics:
+    def __init__(self):
+        self.submitted = 0
+        self.completed = 0
+        self.ticks = 0
+        self.unet_steps = 0
+        self.total_energy_j = 0.0
+        self.slo_violations = 0
+        self.results: List[GenerationResult] = []
+        self._latencies: List[float] = []       # kept sorted
+        self._first_submit: Optional[float] = None
+        self._last_finish: Optional[float] = None
+
+    # -- recording ---------------------------------------------------------
+    def record_submit(self, now: float):
+        self.submitted += 1
+        if self._first_submit is None or now < self._first_submit:
+            self._first_submit = now
+
+    def record_tick(self, active_slots: int):
+        self.ticks += 1
+        self.unet_steps += active_slots
+
+    def record_complete(self, res: GenerationResult,
+                        slo_ms: Optional[float] = None):
+        self.completed += 1
+        self.results.append(res)
+        bisect.insort(self._latencies, res.latency_s)
+        self.total_energy_j += res.energy_j
+        self._last_finish = res.finish_time if self._last_finish is None \
+            else max(self._last_finish, res.finish_time)
+        if slo_ms is not None and res.latency_s * 1e3 > slo_ms:
+            self.slo_violations += 1
+
+    # -- reading -----------------------------------------------------------
+    def percentile_latency(self, p: float) -> float:
+        """Nearest-rank latency percentile over completed requests."""
+        if not self._latencies:
+            return 0.0
+        idx = min(len(self._latencies) - 1,
+                  max(0, int(round(p / 100.0 * (len(self._latencies) - 1)))))
+        return self._latencies[idx]
+
+    def requests_per_s(self) -> float:
+        if (self.completed == 0 or self._first_submit is None
+                or self._last_finish is None):
+            return 0.0
+        span = self._last_finish - self._first_submit
+        return self.completed / max(span, 1e-9)
+
+    def snapshot(self, active_slots: int = 0,
+                 queued: int = 0) -> MetricsSnapshot:
+        return MetricsSnapshot(
+            submitted=self.submitted, completed=self.completed,
+            ticks=self.ticks, unet_steps=self.unet_steps,
+            active_slots=active_slots, queued=queued,
+            p50_latency_s=self.percentile_latency(50),
+            p95_latency_s=self.percentile_latency(95),
+            requests_per_s=self.requests_per_s(),
+            total_energy_j=self.total_energy_j,
+            slo_violations=self.slo_violations)
+
+    def summary(self) -> Dict[str, float]:
+        s = self.snapshot()
+        return {
+            'completed': float(s.completed),
+            'requests_per_s': s.requests_per_s,
+            'p50_latency_ms': s.p50_latency_s * 1e3,
+            'p95_latency_ms': s.p95_latency_s * 1e3,
+            'total_energy_mj': s.total_energy_j * 1e3,
+            'energy_per_request_mj': (s.total_energy_j * 1e3 /
+                                      max(s.completed, 1)),
+            'slo_violations': float(s.slo_violations),
+        }

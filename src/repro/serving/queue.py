@@ -1,0 +1,57 @@
+"""Admission queue: priority classes with FIFO order inside each class.
+
+Pure host-side bookkeeping — nothing here touches a device.  The queue
+stamps each request's enqueue time so the engine can attribute queueing
+delay separately from service time, and keeps an optional depth bound so
+overload turns into rejected admissions instead of unbounded memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional, Tuple
+
+from repro.serving.api import GenerationRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class Queued:
+    """A request plus its admission bookkeeping."""
+    request: GenerationRequest
+    enqueue_time: float
+
+
+class AdmissionQueue:
+    def __init__(self, max_depth: Optional[int] = None):
+        self.max_depth = max_depth
+        self._heap: List[Tuple[int, int, Queued]] = []
+        self._seq = 0                 # FIFO tiebreak within a priority
+        self.submitted = 0
+        self.rejected = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, req: GenerationRequest, now: float = 0.0) -> bool:
+        """Enqueue; returns False (rejected) when the queue is full."""
+        if self.max_depth is not None and len(self._heap) >= self.max_depth:
+            self.rejected += 1
+            return False
+        self._seq += 1
+        heapq.heappush(self._heap,
+                       (-req.priority, self._seq, Queued(req, now)))
+        self.submitted += 1
+        return True
+
+    def pop(self) -> Optional[Queued]:
+        """Highest-priority (then oldest) entry, or None when empty."""
+        if not self._heap:
+            return None
+        return heapq.heappop(self._heap)[2]
+
+    def oldest_wait(self, now: float) -> float:
+        """Age of the oldest queued request (0 when empty)."""
+        if not self._heap:
+            return 0.0
+        return max(0.0, now - min(q.enqueue_time
+                                  for _, _, q in self._heap))

@@ -1,10 +1,11 @@
 """Property & unit tests for the paper's core techniques (C1-C6)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip('hypothesis', exc_type=ImportError)
+st = pytest.importorskip('hypothesis.strategies', exc_type=ImportError)
 from hypothesis import given, settings
 
 from repro.core import attention_decomp as AD

@@ -16,6 +16,7 @@ TINY = UNetConfig('tiny', img_size=16, in_ch=3, base_ch=32, ch_mults=(1, 2),
                   timesteps=16)
 
 
+@pytest.mark.smoke
 def test_schedule_monotone():
     s = linear_schedule(100)
     ab = np.asarray(s.alpha_bars)

@@ -1,0 +1,235 @@
+"""Continuous-batching serving engine tests: numerical equivalence with
+sequential per-request sampling, zero recompilation after warmup,
+scheduler completeness under staggered arrivals, metric monotonicity,
+queue priorities and the slot/bucket policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.diffusion.samplers import ddim_sample, ddim_step, ddim_timesteps
+from repro.diffusion.schedule import linear_schedule
+from repro.models.autoencoder import VAEConfig
+from repro.models.unet import UNetConfig
+from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
+                           GenerationRequest, PhotonicAccountant,
+                           BucketRouter, bucket_for, choose_slots)
+
+TINY = UNetConfig('tiny-serve', img_size=16, in_ch=3, base_ch=32,
+                  ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                  n_heads=4, timesteps=16)
+
+
+@pytest.fixture(scope='module')
+def pipe():
+    return DiffusionPipeline.init(jax.random.PRNGKey(0), TINY)
+
+
+def _drive(engine, submits, max_ticks=200):
+    """Logical-clock loop: ``submits`` maps tick index -> requests."""
+    results, now = [], 0.0
+    for k in range(max_ticks):
+        for req in submits.get(k, ()):
+            assert engine.submit(req, now=now)
+        results.extend(engine.tick(now=now))
+        now += 1.0
+        if engine.busy:
+            continue
+        if all(t <= k for t in submits):
+            return results
+    raise AssertionError('engine did not drain')
+
+
+# ---------------------------------------------------------------------------
+# ddim_step refactor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_ddim_step_vectorizes_per_sample_timesteps():
+    """One mixed-timestep call == per-sample scalar-timestep calls."""
+    sched = linear_schedule(32)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3, 4, 4, 2))
+    eps = jax.random.normal(jax.random.PRNGKey(1), x.shape)
+    t = jnp.array([30, 17, 2], jnp.int32)
+    t_prev = jnp.array([17, 2, -1], jnp.int32)
+    mixed = ddim_step(sched, eps, x, t, t_prev)
+    for b in range(3):
+        one = ddim_step(sched, eps[b:b + 1], x[b:b + 1],
+                        int(t[b]), int(t_prev[b]))
+        np.testing.assert_allclose(np.asarray(mixed[b]),
+                                   np.asarray(one[0]), atol=1e-6)
+
+
+def test_ddim_sample_unchanged_by_refactor():
+    """ddim_sample still denoises pure noise toward the data scale."""
+    sched = linear_schedule(32)
+    out = ddim_sample(sched, lambda x, t: jnp.zeros_like(x), (2, 4, 4, 1),
+                      jax.random.PRNGKey(0), steps=8)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+# ---------------------------------------------------------------------------
+# engine correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_mixed_timestep_equals_sequential_sampling(pipe):
+    """Staggered requests with DIFFERENT step counts, multiplexed through
+    shared mixed-timestep steps, must match per-request sequential DDIM
+    (DiffusionPipeline.generate, batch=1) at atol 1e-5."""
+    engine = ContinuousBatchingEngine(pipe, slots=3)
+    reqs = [GenerationRequest(i, seed=100 + i, steps=s)
+            for i, s in enumerate([3, 5, 4, 2])]
+    # 4 requests into 3 slots, staggered over the first ticks
+    results = _drive(engine, {0: reqs[:2], 1: [reqs[2]], 3: [reqs[3]]})
+    assert sorted(r.request_id for r in results) == [0, 1, 2, 3]
+    for r in results:
+        ref = pipe.generate(jax.random.PRNGKey(100 + r.request_id),
+                            batch=1, steps=r.steps)
+        np.testing.assert_allclose(r.image, np.asarray(ref[0]), atol=1e-5)
+
+
+def test_engine_guided_slots_match_pipeline_guidance():
+    """Per-slot classifier-free guidance: a guided and an unguided
+    request sharing ticks each match their sequential counterpart, and
+    the guided tick variant compiles exactly once at warmup."""
+    cfg = UNetConfig('tiny-sdm', img_size=16, in_ch=3, base_ch=32,
+                     ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                     n_heads=4, timesteps=16, context_dim=8)
+    p = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    ctx1 = jax.random.normal(jax.random.PRNGKey(9), (1, 4, 8))
+    ctx = jnp.tile(ctx1, (2, 1, 1))                   # same text, 2 slots
+    engine = ContinuousBatchingEngine(p, slots=2, context=ctx)
+    engine.warmup()
+    warm = engine.compile_stats()
+    assert warm.get('_step_guided', 0) == 1
+    reqs = [GenerationRequest(0, seed=11, steps=3, guidance=2.5),
+            GenerationRequest(1, seed=12, steps=3)]
+    results = _drive(engine, {0: reqs})
+    assert engine.compile_stats() == warm
+    for r in results:
+        req = reqs[r.request_id]
+        ref = p.generate(jax.random.PRNGKey(req.seed), batch=1,
+                         steps=req.steps, context=ctx1,
+                         guidance=req.guidance)
+        np.testing.assert_allclose(r.image, np.asarray(ref[0]), atol=1e-5)
+
+
+def test_engine_with_vae_matches_pipeline():
+    vae = VAEConfig(img_size=16, in_ch=3, z_ch=4, base_ch=16,
+                    ch_mults=(1, 2), groups=8)
+    unet = UNetConfig('tiny-ldm', img_size=8, in_ch=4, base_ch=32,
+                      ch_mults=(1, 2), n_res_blocks=1,
+                      attn_resolutions=(4,), n_heads=4, timesteps=16,
+                      latent=True)
+    p = DiffusionPipeline.init(jax.random.PRNGKey(0), unet, vae_cfg=vae)
+    engine = ContinuousBatchingEngine(p, slots=2)
+    results = _drive(engine, {0: [GenerationRequest(0, seed=7, steps=3)]})
+    ref = p.generate(jax.random.PRNGKey(7), batch=1, steps=3)
+    assert results[0].image.shape == np.asarray(ref[0]).shape
+    np.testing.assert_allclose(results[0].image, np.asarray(ref[0]),
+                               atol=1e-5)
+
+
+@pytest.mark.smoke
+def test_zero_recompilation_after_warmup(pipe):
+    """After warmup, serving any mix of steps/seeds/arrival patterns
+    triggers no new XLA compilations (compile-count probe)."""
+    engine = ContinuousBatchingEngine(pipe, slots=2)
+    engine.warmup()
+    warm = engine.compile_stats()
+    assert all(v >= 1 for v in warm.values()), warm
+    reqs = [GenerationRequest(i, seed=i, steps=s)
+            for i, s in enumerate([2, 6, 3, 4, 5])]
+    results = _drive(engine, {0: reqs[:3], 2: reqs[3:]})
+    assert len(results) == 5
+    assert engine.compile_stats() == warm
+
+
+def test_scheduler_staggered_arrivals_all_complete_metrics_monotone(pipe):
+    """More requests than slots, staggered arrivals: everything drains,
+    and completed/tick/energy counters are monotone along the way."""
+    engine = ContinuousBatchingEngine(pipe, slots=2)
+    engine.warmup()
+    reqs = [GenerationRequest(i, seed=50 + i, steps=2 + (i % 3),
+                              slo_ms=1e9) for i in range(6)]
+    seen, completed_series, energy_series = [], [], []
+    now = 0.0
+    for k in range(100):
+        if k < len(reqs):
+            engine.submit(reqs[k], now=now)
+        seen.extend(engine.tick(now=now))
+        snap = engine.metrics.snapshot(active_slots=engine.active_count,
+                                      queued=len(engine.queue))
+        completed_series.append(snap.completed)
+        energy_series.append(snap.total_energy_j)
+        now += 1.0
+        if k >= len(reqs) and not engine.busy:
+            break
+    assert sorted(r.request_id for r in seen) == list(range(6))
+    assert completed_series == sorted(completed_series)
+    assert energy_series == sorted(energy_series)
+    m = engine.metrics
+    assert m.percentile_latency(50) <= m.percentile_latency(95)
+    assert m.requests_per_s() > 0
+    assert m.slo_violations == 0
+    # latency bookkeeping: queue delay + service == end-to-end
+    for r in seen:
+        assert r.latency_s == pytest.approx(r.queue_delay_s + r.service_s)
+        assert r.energy_j > 0 and r.epb_pj > 0
+
+
+def test_photonic_energy_scales_with_steps(pipe):
+    acct = PhotonicAccountant(TINY)
+    e2, _ = acct.energy(2)
+    e6, _ = acct.energy(6)
+    assert e6 == pytest.approx(3 * e2, rel=1e-6)
+    assert acct.energy(2, guided=True)[0] == pytest.approx(2 * e2, rel=1e-6)
+    # engine results carry exactly the accountant's numbers
+    engine = ContinuousBatchingEngine(pipe, slots=1, photonic=acct)
+    res = _drive(engine, {0: [GenerationRequest(0, seed=1, steps=2)]})
+    assert res[0].energy_j == pytest.approx(e2)
+
+
+# ---------------------------------------------------------------------------
+# queue / batcher policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+def test_queue_priority_then_fifo_and_depth_bound():
+    q = AdmissionQueue(max_depth=3)
+    lo1 = GenerationRequest(1, seed=1, priority=0)
+    lo2 = GenerationRequest(2, seed=2, priority=0)
+    hi = GenerationRequest(3, seed=3, priority=5)
+    assert q.submit(lo1, now=0.0) and q.submit(lo2, now=1.0)
+    assert q.submit(hi, now=2.0)
+    assert not q.submit(GenerationRequest(4, seed=4), now=3.0)  # full
+    assert q.rejected == 1
+    order = [q.pop().request.request_id for _ in range(3)]
+    assert order == [3, 1, 2]            # priority first, FIFO within
+    assert q.pop() is None
+    assert q.oldest_wait(10.0) == 0.0
+
+
+def test_choose_slots_littles_law():
+    # 4 req/s x (10 steps x 50ms) = 2 in flight; /0.8 util -> 3 slots
+    assert choose_slots(4.0, 0.05, 10) == 3
+    assert choose_slots(0.0, 0.05, 10) == 1
+    assert choose_slots(1e6, 0.05, 10, max_slots=16) == 16
+
+
+def test_bucket_router_routes_and_ticks(pipe):
+    router = BucketRouter()
+    b = router.register(ContinuousBatchingEngine(pipe, slots=1))
+    assert b == bucket_for(TINY)
+    assert router.submit(GenerationRequest(0, seed=3, steps=2), now=0.0)
+    out = []
+    for k in range(20):
+        out.extend(router.tick(now=float(k)))
+        if not router.busy:
+            break
+    assert [r.request_id for r in out] == [0]
+    with pytest.raises(ValueError):
+        router.register(ContinuousBatchingEngine(pipe, slots=1))

@@ -58,6 +58,7 @@ def test_dryrun_machinery_small_scale():
     assert 'DRYRUN-OK' in out.stdout
 
 
+@pytest.mark.smoke
 def test_collective_parser():
     from repro.launch.dryrun import parse_collectives
     hlo = '''
@@ -75,6 +76,7 @@ def test_collective_parser():
     assert r['weighted_bytes'] == 16 * 128 * 2 + 2 * 64 * 4 + 64
 
 
+@pytest.mark.smoke
 def test_roofline_terms_math():
     from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
     assert PEAK_FLOPS_BF16 == 197e12
