@@ -11,7 +11,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 (CPU) + sparse-vs-dense transposed conv
   * serving   — continuous-batching engine vs naive batch-at-once under a
                 staggered arrival trace (requests/s + per-request energy)
+  * quant_serving — the precision-policy fast path: the same trace served
+                at fp32 vs w8a8 (requests/s, EPB, PSNR quality probe) plus
+                a mixed-precision zero-recompile check; rows also persist
+                to ``BENCH_PR6.json`` at the repo root
+
+Run everything (default) or name sections on argv:
+    PYTHONPATH=src python benchmarks/run.py quant_serving
 """
+import json
+import os
 import sys
 import time
 
@@ -214,6 +223,89 @@ def bench_serving(emit):
          f'{s["energy_per_request_mj"]:.3f}')
 
 
+def bench_quant_serving(emit):
+    """fp32 vs w8a8 serving on the SAME trace: the precision-policy fast
+    path's headline numbers — requests/s, per-request energy/EPB (fp32 is
+    billed the GPU digital baseline, w8a8 the DiffLight simulation), the
+    PSNR quality probe, and a mixed-precision zero-recompile check."""
+    import jax
+    from repro.diffusion.pipeline import DiffusionPipeline
+    from repro.models.unet import UNetConfig
+    from repro.serving import ContinuousBatchingEngine, GenerationRequest
+    cfg = UNetConfig('bench-qserve', img_size=16, in_ch=3, base_ch=32,
+                     ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                     n_heads=4, timesteps=50)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    N, slots = 6, 3
+    step_counts = [3 + (2 * i) % 5 for i in range(N)]        # 3..7, mixed
+
+    def serve(precision, n=N, quality_probe=0):
+        # probe off while timing: the eager fp32 reference is measurement
+        # apparatus, not served work
+        engine = ContinuousBatchingEngine(pipe, slots=slots,
+                                          quality_probe=quality_probe)
+        engine.warmup(precisions=(precision,))
+        for i in range(n):
+            engine.submit(GenerationRequest(
+                request_id=i, seed=100 + i, steps=step_counts[i % N],
+                precision=precision), now=0.0)
+        warm = engine.compile_stats()
+        t0 = time.perf_counter()
+        results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+        makespan = time.perf_counter() - t0
+        assert len(results) == n
+        assert engine.compile_stats() == warm, 'recompiled mid-serve'
+        f = engine.metrics.frontier()[precision]
+        return n / makespan, f
+
+    fp32_rps, fp32_f = serve('fp32')
+    w8a8_rps, w8a8_f = serve('w8a8')
+    _, w8a8_q = serve('w8a8', n=2, quality_probe=1)    # quality pass
+    emit('quant_serving/fp32_rps', 0.0, f'{fp32_rps:.3f}')
+    emit('quant_serving/w8a8_rps', 0.0, f'{w8a8_rps:.3f}')
+    emit('quant_serving/fp32_epb_pj', 0.0, f'{fp32_f["mean_epb_pj"]:.4f}')
+    emit('quant_serving/w8a8_epb_pj', 0.0, f'{w8a8_f["mean_epb_pj"]:.4f}')
+    emit('quant_serving/fp32_energy_mj_per_req', 0.0,
+         f'{fp32_f["mean_energy_j"] * 1e3:.4f}')
+    emit('quant_serving/w8a8_energy_mj_per_req', 0.0,
+         f'{w8a8_f["mean_energy_j"] * 1e3:.4f}')
+    emit('quant_serving/epb_improvement_x', 0.0,
+         f'{fp32_f["mean_epb_pj"] / w8a8_f["mean_epb_pj"]:.2f}')
+    emit('quant_serving/w8a8_psnr_db_vs_fp32', 0.0,
+         f'{w8a8_q["mean_psnr_db"]:.2f}')
+    emit('quant_serving/w8a8_mse_vs_fp32', 0.0,
+         f'{w8a8_q["mean_mse"]:.3e}')
+
+    # mixed-precision tick: every policy in one engine, zero recompiles
+    engine = ContinuousBatchingEngine(pipe, slots=slots, quality_probe=0)
+    engine.warmup(precisions=('fp32', 'w8a8', 'w8a8+noise'))
+    warm = engine.compile_stats()
+    mix = ['fp32', 'w8a8', 'w8a8+noise']
+    for i in range(N):
+        engine.submit(GenerationRequest(
+            request_id=100 + i, seed=200 + i, steps=step_counts[i],
+            precision=mix[i % 3]), now=0.0)
+    results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+    assert len(results) == N
+    ok = engine.compile_stats() == warm
+    emit('quant_serving/mixed_zero_recompiles', 0.0, str(ok).lower())
+
+
+SECTIONS = {
+    'table1': bench_table1,
+    'fig8': bench_fig8,
+    'fig9_fig10': bench_fig9_fig10,
+    'deepcache': bench_deepcache,
+    'dse': bench_dse,
+    'kernels': bench_kernels,
+    'serving': bench_serving,
+    'quant_serving': bench_quant_serving,
+}
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          '..', 'BENCH_PR6.json')
+
+
 def main() -> None:
     rows = []
 
@@ -221,15 +313,19 @@ def main() -> None:
         rows.append((name, us, derived))
         print(f'{name},{us:.1f},{derived}', flush=True)
 
+    names = sys.argv[1:] or list(SECTIONS)
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        sys.exit(f'unknown section(s) {unknown}; pick from {list(SECTIONS)}')
     print('name,us_per_call,derived')
-    bench_table1(emit)
-    bench_fig8(emit)
-    bench_fig9_fig10(emit)
-    bench_deepcache(emit)
-    bench_dse(emit)
-    bench_kernels(emit)
-    bench_serving(emit)
-    sys.stderr.write(f'[benchmarks] {len(rows)} rows\n')
+    for n in names:
+        SECTIONS[n](emit)
+    with open(BENCH_JSON, 'w') as f:
+        json.dump({'sections': names,
+                   'rows': [{'name': n, 'us_per_call': us, 'derived': d}
+                            for n, us, d in rows]}, f, indent=2)
+        f.write('\n')
+    sys.stderr.write(f'[benchmarks] {len(rows)} rows -> {BENCH_JSON}\n')
 
 
 if __name__ == '__main__':

@@ -3,26 +3,34 @@
 Serving quickstart
 ------------------
 The engine multiplexes independent generation requests — each with its
-own seed, DDIM step count and guidance — into fixed-shape mixed-timestep
-UNet steps, so a request can be admitted the moment a slot frees up
-instead of waiting for the whole batch::
+own seed, DDIM step count, guidance AND precision — into fixed-shape
+mixed-timestep UNet steps, so a request can be admitted the moment a
+slot frees up instead of waiting for the whole batch.  Precision is
+selected per request (``'fp32' | 'w8a8' | 'w8a8+noise'``): the engine
+groups compatible precisions per tick and runs one pre-compiled step per
+group, so mixing precisions never recompiles::
 
     from repro.serving import ContinuousBatchingEngine, GenerationRequest
     pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), unet_cfg)
     engine = ContinuousBatchingEngine(pipe, slots=8)
-    engine.warmup()                       # compile once; zero recompiles after
-    engine.submit(GenerationRequest(request_id=0, seed=42, steps=50))
+    engine.warmup(precisions=('fp32', 'w8a8'))   # one compile per policy
+    engine.submit(GenerationRequest(request_id=0, seed=42, steps=50,
+                                    precision='w8a8'))
     while engine.busy:
-        for res in engine.tick():         # one UNet call per tick
-            print(res.request_id, res.latency_s, res.energy_j)
+        for res in engine.tick():         # one UNet call per tick per policy
+            print(res.request_id, res.latency_s, res.energy_j,
+                  res.quality_psnr_db)    # PSNR vs the fp32 reference
+    engine.metrics.snapshot().frontier    # accuracy-vs-EPB, per policy
 
-Every completed request reports the DiffLight energy the photonic
-simulator attributes to its denoising work (``res.energy_j``,
-``res.epb_pj``).  This demo replays a staggered arrival trace and
-compares against serving the same requests as one naive batch-at-once
-call:
+Quantized requests are billed the simulated DiffLight energy (~94x lower
+EPB than the GPU digital baseline an fp32 request is billed) and sampled
+ones carry a PSNR/MSE quality probe against the fp32 reference — the
+per-request points of the accuracy-vs-energy frontier.  This demo
+replays a staggered arrival trace and compares against serving the same
+requests as one naive batch-at-once call:
 
-    PYTHONPATH=src python examples/serve_diffusion.py --requests 8 --slots 4
+    PYTHONPATH=src python examples/serve_diffusion.py --requests 8 \
+        --slots 4 --precision w8a8
 """
 import argparse
 import time
@@ -43,20 +51,26 @@ def main():
     ap.add_argument('--img', type=int, default=32)
     ap.add_argument('--rate', type=float, default=0.0,
                     help='arrival rate req/s (0 = auto from step time)')
+    ap.add_argument('--precision', default='w8a8',
+                    choices=['fp32', 'w8a8', 'w8a8+noise'],
+                    help='per-request precision policy')
     ap.add_argument('--fp32', action='store_true',
-                    help='disable W8A8 serving')
+                    help='deprecated alias for --precision fp32')
     args = ap.parse_args()
+    precision = 'fp32' if args.fp32 else args.precision
 
     cfg = UNetConfig('serve-demo', img_size=args.img, in_ch=3, base_ch=64,
                      ch_mults=(1, 2), n_res_blocks=1,
                      attn_resolutions=(args.img // 2,), n_heads=4,
                      timesteps=100)
-    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg,
-                                  quant=not args.fp32)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
     N, steps = args.requests, args.steps
 
     # --- naive batch-at-once baseline: wait for all N, one generate() ----
-    gen = jax.jit(lambda k: pipe.generate(k, batch=N, steps=steps))
+    from repro.core.precision import PrecisionPolicy
+    pol = PrecisionPolicy.from_name(precision)
+    gen = jax.jit(lambda k: pipe.generate(k, batch=N, steps=steps,
+                                          policy=pol))
     print('[baseline] warmup (compile)...', flush=True)
     jax.block_until_ready(gen(jax.random.PRNGKey(1)))
     t0 = time.perf_counter()
@@ -66,14 +80,18 @@ def main():
     assert np.all(np.isfinite(np.asarray(img)))
 
     # --- continuous batching over a staggered trace ----------------------
-    engine = ContinuousBatchingEngine(pipe, slots=args.slots)
+    # quality probe off for the throughput race; see --help of
+    # repro.launch.serve for the probed frontier report
+    engine = ContinuousBatchingEngine(pipe, slots=args.slots,
+                                      quality_probe=0)
     print('[engine] warmup (compile)...', flush=True)
-    engine.warmup()
+    engine.warmup(precisions=(precision,))
     # arrivals spread over one baseline service window: batch-at-once can
     # only start when the last request lands; the engine starts at once
     rate = args.rate or N / max(t_batch, 1e-3)
     trace = [GenerationRequest(request_id=i, seed=100 + i, steps=steps,
-                               arrival_time=i / rate) for i in range(N)]
+                               arrival_time=i / rate, precision=precision)
+             for i in range(N)]
     t0 = time.perf_counter()
     results = engine.replay(trace)
     makespan = time.perf_counter() - t0
@@ -91,9 +109,11 @@ def main():
           f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms)')
     print(f'[engine]   speedup vs batch-at-once: '
           f'{base_makespan / makespan:.2f}x')
-    print(f'[difflight] {s["energy_per_request_mj"]:.2f} mJ/request '
-          f'({s["total_energy_mj"]:.1f} mJ total, simulated '
-          f'@ {results[0].epb_pj:.3f} pJ/bit)')
+    src = 'simulated DiffLight' if precision != 'fp32' \
+        else 'GPU digital baseline'
+    print(f'[energy]   {s["energy_per_request_mj"]:.2f} mJ/request '
+          f'({s["total_energy_mj"]:.1f} mJ total, {src} '
+          f'@ {results[0].epb_pj:.3f} pJ/bit, precision={precision})')
 
 
 if __name__ == '__main__':

@@ -6,7 +6,8 @@
 # caught here before merge.  Stages:
 #   1. collection must succeed without hypothesis
 #   2. smoke lane (-m smoke): fast signal first
-#   3. full tier-1 suite
+#   3. quant serving lane (-m quant): the precision-policy fast path
+#   4. full tier-1 suite
 #
 # CI_SMOKE_ONLY=1 stops after stage 2 (pre-push hook scale).
 set -euo pipefail
@@ -15,10 +16,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/scripts/ci_stubs:$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 
-echo '== [1/3] collection (hypothesis absent) =='
+echo '== [1/4] collection (hypothesis absent) =='
 python -m pytest -q --collect-only >/dev/null
 
-echo '== [2/3] smoke lane =='
+echo '== [2/4] smoke lane =='
 python -m pytest -q -m smoke
 
 if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
@@ -26,5 +27,8 @@ if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
     exit 0
 fi
 
-echo '== [3/3] full tier-1 =='
+echo '== [3/4] quant serving lane =='
+python -m pytest -q -m quant
+
+echo '== [4/4] full tier-1 =='
 python -m pytest -q

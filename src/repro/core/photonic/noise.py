@@ -16,6 +16,7 @@ provide (a) a noisy variant of the W8A8 matmul for robustness sweeps and
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -36,18 +37,21 @@ def crosstalk_sigma_lsb(n_channels: int, model: NoiseModel) -> float:
     n-1 wavelengths on one waveguide.  Grows ~linearly in channel count at
     fixed isolation — the quantitative reason a waveguide is capped at 36
     MRs (paper §V, Lumerical analysis)."""
+    # pure-Python math: the result is a trace-time constant, so the noisy
+    # matmul stays jittable (the engine compiles it into its step)
     leak = 10.0 ** (model.crosstalk_db_per_channel / 10.0)
-    return float(jnp.sqrt(max(n_channels - 1, 0) * leak) * 127.0)
+    return math.sqrt(max(n_channels - 1, 0) * leak) * 127.0
 
 
-def noisy_w8a8_matmul(key, x: jax.Array, w: jax.Array,
-                      model: NoiseModel = NoiseModel(),
+def noisy_w8a8_matmul(key, x: jax.Array, w, model: NoiseModel = NoiseModel(),
                       n_channels: int = 36) -> jax.Array:
-    """W8A8 matmul with analog perturbations (pure-jnp; used for robustness
-    sweeps, not the serving path)."""
+    """W8A8 matmul with analog perturbations (pure-jnp).  Serves both the
+    robustness sweeps and the engine's ``w8a8+noise`` precision policy;
+    ``w`` may be a float weight or a pre-quantized QTensor.  Deterministic
+    under a fixed ``key`` — the same key reproduces the same analog draw."""
     kx, kw, kp = jax.random.split(key, 3)
     xq = quantize(x.reshape(-1, x.shape[-1]), axis=(1,))
-    wq = quantize_per_channel(w)
+    wq = w if isinstance(w, QTensor) else quantize_per_channel(w)
     xn = xq.q.astype(jnp.float32) + \
         model.sigma_x_lsb * jax.random.normal(kx, xq.q.shape)
     wn = wq.q.astype(jnp.float32) + \
@@ -58,7 +62,7 @@ def noisy_w8a8_matmul(key, x: jax.Array, w: jax.Array,
     acc = acc + sigma_out * jax.random.normal(kp, acc.shape) * \
         jnp.sqrt(jnp.asarray(x.shape[-1], jnp.float32))
     out = acc * xq.scale * wq.scale.reshape(1, -1)
-    return out.reshape(x.shape[:-1] + (w.shape[-1],))
+    return out.reshape(x.shape[:-1] + (wq.q.shape[-1],))
 
 
 def robustness_sweep(key, x: jax.Array, w: jax.Array,

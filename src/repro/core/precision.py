@@ -1,0 +1,162 @@
+"""Precision-policy API: ONE type describing how matmuls execute.
+
+The paper's 3x energy claim rests on 8-bit analog photonic compute, so
+"how precise is this UNet evaluation" is a first-class serving decision,
+not a boolean.  A ``PrecisionPolicy`` bundles everything the execution
+path needs — backend, bit-width, analog-noise model, calibration mode —
+into a single frozen (hashable) value that call sites close over, so a
+jitted step is specialized per policy and adding a future policy (e.g.
+per-layer mixed precision) touches this type instead of every call site.
+
+Built-in policies:
+
+  * ``PrecisionPolicy.fp32()``       — full-precision digital baseline;
+  * ``PrecisionPolicy.w8a8()``       — DiffLight W8A8 analog path (C1):
+    per-output-channel weight scales, dynamic per-row activation scales;
+  * ``PrecisionPolicy.w8a8_noise()`` — W8A8 plus the analog perturbation
+    model of ``core/photonic/noise.py`` (MR calibration error, thermal
+    drift, PD shot noise, WDM crosstalk).
+
+The legacy ``quant: bool`` flag threaded through ``layers.linear``,
+``unet_apply`` and ``DiffusionPipeline`` is deprecated; ``resolve``
+keeps a one-release shim mapping ``quant=True`` to ``w8a8()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional
+
+import jax
+
+from repro.core.photonic.noise import NoiseModel
+
+#: request-level precision names accepted by the serving engine
+PRECISION_NAMES = ('fp32', 'w8a8', 'w8a8+noise')
+
+#: activation/weight calibration modes ('dynamic': per-row activation
+#: scales computed at run time; 'prequant': weights pre-quantized to
+#: QTensors at build time, activations still dynamic)
+CALIBRATIONS = ('dynamic', 'prequant')
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """How matmuls execute: backend, bit-width, noise, calibration.
+
+    Frozen + hashable so a policy can key jit caches and be closed over
+    by compiled step functions.  ``noise_seed`` anchors the noise PRNG
+    when the caller does not thread an explicit key (determinism under a
+    fixed seed is a test invariant).
+    """
+    backend: str = 'fp32'                  # 'fp32' | 'w8a8'
+    bits: int = 32                         # operand bit-width
+    noise: Optional[NoiseModel] = None     # analog perturbations (w8a8 only)
+    noise_seed: int = 0                    # PRNG anchor when no key threaded
+    n_channels: int = 36                   # WDM channels (crosstalk model)
+    calibration: str = 'dynamic'
+
+    def __post_init__(self):
+        if self.backend not in ('fp32', 'w8a8'):
+            raise ValueError(f'unknown precision backend {self.backend!r}')
+        if self.calibration not in CALIBRATIONS:
+            raise ValueError(f'unknown calibration {self.calibration!r}')
+        if self.backend == 'fp32' and self.noise is not None:
+            raise ValueError('noise model requires the w8a8 backend')
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def fp32(cls) -> 'PrecisionPolicy':
+        return cls()
+
+    @classmethod
+    def w8a8(cls, calibration: str = 'dynamic') -> 'PrecisionPolicy':
+        return cls(backend='w8a8', bits=8, calibration=calibration)
+
+    @classmethod
+    def w8a8_noise(cls, model: Optional[NoiseModel] = None,
+                   noise_seed: int = 0,
+                   n_channels: int = 36) -> 'PrecisionPolicy':
+        return cls(backend='w8a8', bits=8, noise=model or NoiseModel(),
+                   noise_seed=noise_seed, n_channels=n_channels)
+
+    @classmethod
+    def from_name(cls, name: str) -> 'PrecisionPolicy':
+        if name == 'fp32':
+            return cls.fp32()
+        if name == 'w8a8':
+            return cls.w8a8()
+        if name == 'w8a8+noise':
+            return cls.w8a8_noise()
+        raise ValueError(f'unknown precision {name!r} '
+                         f'(expected one of {PRECISION_NAMES})')
+
+    # -- views -------------------------------------------------------------
+    @property
+    def name(self) -> str:
+        if self.backend == 'fp32':
+            return 'fp32'
+        return 'w8a8+noise' if self.noise is not None else 'w8a8'
+
+    @property
+    def quantized(self) -> bool:
+        return self.backend == 'w8a8'
+
+    @property
+    def noisy(self) -> bool:
+        return self.noise is not None
+
+
+def resolve(policy=None, quant: Optional[bool] = None) -> PrecisionPolicy:
+    """Coerce (policy, legacy quant flag) to one PrecisionPolicy.
+
+    Accepts a PrecisionPolicy, a precision name string, or (shim) a bool
+    that slipped into the policy slot positionally.  ``quant=True`` maps
+    to ``w8a8()`` with a DeprecationWarning — remove after one release.
+    """
+    if isinstance(policy, bool):            # legacy positional quant flag
+        policy, quant = None, policy
+    if policy is not None:
+        if isinstance(policy, str):
+            return PrecisionPolicy.from_name(policy)
+        return policy
+    if quant:
+        warnings.warn(
+            'quant=True is deprecated; pass '
+            'policy=PrecisionPolicy.w8a8() instead',
+            DeprecationWarning, stacklevel=3)
+        return PrecisionPolicy.w8a8()
+    return PrecisionPolicy.fp32()
+
+
+class NoiseKeyStream:
+    """Trace-time PRNG key dispenser for analog-noise injection.
+
+    Each noisy matmul call site gets ``fold_in(base, i)`` with a Python
+    counter that advances at trace time, so every layer draws independent
+    noise while the whole network stays deterministic under a fixed base
+    key.  A stream built from ``None`` dispenses ``None`` (no noise) —
+    callers never need to branch.
+    """
+
+    def __init__(self, base_key):
+        self._base = base_key
+        self._i = 0
+
+    def next(self):
+        if self._base is None:
+            return None
+        k = jax.random.fold_in(self._base, self._i)
+        self._i += 1
+        return k
+
+
+def stream_for(policy: PrecisionPolicy, noise_key=None) -> NoiseKeyStream:
+    """The noise-key stream an apply function should dispense from:
+    the caller's key when threaded, else the policy's seed anchor, else
+    an inert stream for noise-free policies."""
+    if not policy.noisy:
+        return NoiseKeyStream(None)
+    if noise_key is None:
+        noise_key = jax.random.PRNGKey(policy.noise_seed)
+    return NoiseKeyStream(noise_key)

@@ -26,7 +26,7 @@ from repro.models.unet import (UNetConfig, attn_block, resblock,
 
 def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
                       cache: Optional[jax.Array], refresh: bool,
-                      context=None, quant: bool = False
+                      context=None, policy=None, *, noise_key=None
                       ) -> Tuple[jax.Array, jax.Array]:
     """UNet forward with DeepCache.
 
@@ -36,7 +36,12 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
                     blocks and the last up level, splicing in the cached
                     deep activation.
     Static `refresh` (two jitted variants), matching the interval schedule.
+    ``policy`` selects the matmul precision (PrecisionPolicy; the legacy
+    positional bool still resolves).
     """
+    from repro.core.precision import resolve, stream_for
+    pol = resolve(policy)
+    keys = stream_for(pol, noise_key)
     g = cfg.groups
     t_emb = timestep_embedding(t, cfg.base_ch)
     t_emb = L.linear(p['t_mlp2'], L.swish(L.linear(p['t_mlp1'], t_emb)))
@@ -48,7 +53,7 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
     for b in lvl0['blocks']:
         h = resblock(b['res'], h, t_emb, g)
         if 'attn' in b:
-            h = attn_block(b['attn'], h, g, cfg.n_heads, context, quant)
+            h = attn_block(b['attn'], h, g, cfg.n_heads, context, pol, keys)
         skips.append(h)
 
     if refresh or cache is None:
@@ -62,13 +67,13 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
                 hh = resblock(b['res'], hh, t_emb, g)
                 if 'attn' in b:
                     hh = attn_block(b['attn'], hh, g, cfg.n_heads, context,
-                                    quant)
+                                    pol, keys)
                 deep_skips.append(hh)
             if 'down' in lvl_p:
                 hh = L.conv2d(lvl_p['down'], hh, stride=2)
                 deep_skips.append(hh)
         hh = resblock(p['mid']['res1'], hh, t_emb, g)
-        hh = attn_block(p['mid']['attn'], hh, g, cfg.n_heads, context, quant)
+        hh = attn_block(p['mid']['attn'], hh, g, cfg.n_heads, context, pol, keys)
         hh = resblock(p['mid']['res2'], hh, t_emb, g)
         for lvl_p in p['up'][:-1]:
             for b in lvl_p['blocks']:
@@ -76,7 +81,7 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
                 hh = resblock(b['res'], hh, t_emb, g)
                 if 'attn' in b:
                     hh = attn_block(b['attn'], hh, g, cfg.n_heads, context,
-                                    quant)
+                                    pol, keys)
             if 'upconv' in lvl_p:
                 hh = L.conv_transpose2d(lvl_p['upconv'], hh, stride=2,
                                         sparse_dataflow=cfg.sparse_dataflow)
@@ -91,7 +96,7 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
         h_up = resblock(b['res'], h_up, t_emb, g)
         if 'attn' in b:
             h_up = attn_block(b['attn'], h_up, g, cfg.n_heads, context,
-                              quant)
+                              pol, keys)
     h_up = _gn_swish(p['gn_out'], h_up, g)
     return L.conv2d(p['conv_out'], h_up), new_cache
 

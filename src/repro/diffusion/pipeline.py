@@ -1,8 +1,13 @@
 """End-to-end diffusion serving pipeline (the paper's workload).
 
 Batched request generation: noise -> iterative UNet denoising (DDPM or DDIM)
--> (for latent models) VAE decode.  ``quant=True`` serves the UNet through
-the W8A8 path (C1) with classifier-free guidance optional for SDM.
+-> (for latent models) VAE decode.  The pipeline carries a
+``PrecisionPolicy`` (``repro.core.precision``) selecting how UNet matmuls
+execute — fp32, the W8A8 photonic path (C1), or W8A8 with analog-noise
+injection — and every apply entry point takes a per-call ``policy=``
+override so one pipeline can serve requests at different precisions (the
+serving engine's per-request precision selection).  The legacy
+``quant: bool`` is a deprecated alias for ``policy=PrecisionPolicy.w8a8()``.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import PrecisionPolicy, resolve
 from repro.diffusion import samplers
 from repro.diffusion.schedule import Schedule, linear_schedule
 from repro.models import autoencoder as AE
@@ -26,17 +32,52 @@ class DiffusionPipeline:
     sched: Schedule
     vae_cfg: Optional[AE.VAEConfig] = None
     vae_params: Any = None
-    quant: bool = False
+    policy: PrecisionPolicy = PrecisionPolicy.fp32()
+
+    def __post_init__(self):
+        # one-release shim: a bool / name in the policy slot still resolves
+        if not isinstance(self.policy, PrecisionPolicy):
+            self.policy = resolve(self.policy)
 
     @classmethod
     def init(cls, key, unet_cfg: U.UNetConfig,
              vae_cfg: Optional[AE.VAEConfig] = None,
-             timesteps: Optional[int] = None, quant: bool = False):
+             timesteps: Optional[int] = None, quant: Optional[bool] = None,
+             policy: Optional[PrecisionPolicy] = None):
+        """Build a pipeline with freshly initialized params.  ``policy``
+        sets the default execution precision; ``quant=True`` is the
+        deprecated boolean form of ``policy=PrecisionPolicy.w8a8()``."""
         k1, k2 = jax.random.split(key)
         unet_params = U.init_unet(k1, unet_cfg)
         vae_params = AE.init_vae(k2, vae_cfg) if vae_cfg else None
         sched = linear_schedule(timesteps or unet_cfg.timesteps)
-        return cls(unet_cfg, unet_params, sched, vae_cfg, vae_params, quant)
+        return cls(unet_cfg, unet_params, sched, vae_cfg, vae_params,
+                   resolve(policy, quant))
+
+    @property
+    def quant(self) -> bool:
+        """Deprecated view of the default policy (kept for one release)."""
+        return self.policy.quantized
+
+    def prequantize(self) -> 'DiffusionPipeline':
+        """Serve-time calibration: pre-quantize every attention projection
+        weight to a per-output-channel QTensor — exactly the weights the
+        dynamic w8a8 path quantizes on the fly, with the same scale rule,
+        so outputs agree to rounding (~1 LSB at tie boundaries) — and pin
+        the policy's calibration mode."""
+        from repro.core.quantization import quantize_per_channel
+        proj = {'wq', 'wk', 'wv', 'wo', 'xq', 'xk', 'xv', 'xo'}
+
+        def one(path, leaf):
+            names = [str(getattr(k, 'key', '')) for k in path]
+            if len(names) >= 2 and names[-1] == 'w' and names[-2] in proj:
+                return quantize_per_channel(leaf)
+            return leaf
+        params = jax.tree_util.tree_map_with_path(one, self.unet_params)
+        pol = self.policy if self.policy.quantized else PrecisionPolicy.w8a8()
+        return dataclasses.replace(
+            self, unet_params=params,
+            policy=dataclasses.replace(pol, calibration='prequant'))
 
     def generate_deepcache(self, key, batch: int, steps: int = 50,
                            interval: int = 5, context=None) -> jax.Array:
@@ -52,9 +93,9 @@ class DiffusionPipeline:
         x = jax.random.normal(k0, shape)
         cache = None
         full = _jax.jit(lambda p, xx, tt, ctx: unet_apply_cached(
-            p, self.unet_cfg, xx, tt, None, True, ctx, self.quant))
+            p, self.unet_cfg, xx, tt, None, True, ctx, self.policy))
         shallow = _jax.jit(lambda p, xx, tt, c, ctx: unet_apply_cached(
-            p, self.unet_cfg, xx, tt, c, False, ctx, self.quant))
+            p, self.unet_cfg, xx, tt, c, False, ctx, self.policy))
         for i, t in enumerate(ts):
             tb = jnp.full((batch,), int(t), jnp.int32)
             if i % interval == 0 or cache is None:
@@ -67,13 +108,32 @@ class DiffusionPipeline:
             x = AE.vae_decode(self.vae_params, self.vae_cfg, x)
         return x
 
-    def _eps_fn(self, context=None, guidance: float = 0.0):
+    def _eps_fn(self, context=None, guidance: float = 0.0,
+                policy: Optional[PrecisionPolicy] = None, noise_key=None):
+        """Noise-prediction closure at a given precision.  For a noisy
+        policy the per-evaluation key folds in the (first) timestep so
+        the analog draw varies along the trajectory; an explicit
+        ``noise_key`` re-anchors it (the engine threads a per-tick key)."""
+        pol = resolve(policy) if policy is not None else self.policy
+        base = None
+        if pol.noisy:
+            base = noise_key if noise_key is not None else \
+                jax.random.PRNGKey(pol.noise_seed)
+
+        def keyed(t, branch):
+            if base is None:
+                return None
+            k = jax.random.fold_in(base, jnp.reshape(t, (-1,))[0])
+            return jax.random.fold_in(k, branch)
+
         def eps(x, t):
             e = U.unet_apply(self.unet_params, self.unet_cfg, x, t,
-                             context=context, quant=self.quant)
+                             context=context, policy=pol,
+                             noise_key=keyed(t, 0))
             if guidance > 0.0 and context is not None:
                 e_unc = U.unet_apply(self.unet_params, self.unet_cfg, x, t,
-                                     context=None, quant=self.quant)
+                                     context=None, policy=pol,
+                                     noise_key=keyed(t, 1))
                 e = e_unc + guidance * (e - e_unc)
             return e
         return eps
@@ -83,18 +143,24 @@ class DiffusionPipeline:
         return (batch, c.img_size, c.img_size, c.in_ch)
 
     def denoise_step(self, x: jax.Array, t: jax.Array, t_prev: jax.Array,
-                     context=None, guidance: float = 0.0) -> jax.Array:
+                     context=None, guidance: float = 0.0,
+                     policy: Optional[PrecisionPolicy] = None,
+                     noise_key=None) -> jax.Array:
         """One mixed-timestep DDIM step: `t` / `t_prev` are per-sample
         (B,) vectors, so a batch may hold samples at different denoising
-        depths (the serving engine's per-tick kernel)."""
-        eps = self._eps_fn(context, guidance)(x, jnp.asarray(t, jnp.int32))
+        depths (the serving engine's per-tick kernel).  ``policy``
+        overrides the pipeline default for this step."""
+        eps = self._eps_fn(context, guidance, policy=policy,
+                           noise_key=noise_key)(x, jnp.asarray(t, jnp.int32))
         return samplers.ddim_step(self.sched, eps, x, t, t_prev)
 
     def generate(self, key, batch: int, steps: int = 50,
                  sampler: str = 'ddim', context=None,
-                 guidance: float = 0.0) -> jax.Array:
-        """Serve one batch of generation requests; returns images/latents."""
-        eps = self._eps_fn(context, guidance)
+                 guidance: float = 0.0,
+                 policy: Optional[PrecisionPolicy] = None) -> jax.Array:
+        """Serve one batch of generation requests; returns images/latents.
+        ``policy`` overrides the pipeline's default precision."""
+        eps = self._eps_fn(context, guidance, policy=policy)
         shape = self.sample_shape(batch)
         if sampler == 'ddpm':
             z = samplers.ddpm_sample(self.sched, eps, shape, key)

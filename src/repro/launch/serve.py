@@ -1,17 +1,22 @@
 """Serving loop: batched LM decode (prefill + N decode steps) or
-continuous-batching diffusion generation, with optional W8A8 (paper C1).
+continuous-batching diffusion generation, with per-request precision
+policies (paper C1: the W8A8 photonic path).
 
 CPU-scale demos:
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
         --preset smoke --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --diffusion \
-        --requests 8 --rate 4 --slots 4 --steps 6
+        --requests 8 --rate 4 --slots 4 --steps 6 --precision w8a8
 
 The diffusion mode replays a Poisson arrival trace through the
 continuous-batching engine (``repro.serving``): requests arrive with
 exponential inter-arrival times at ``--rate`` req/s, are multiplexed
 into mixed-timestep UNet steps, and report p50/p95 latency, requests/s
-and the per-request DiffLight energy.
+and the per-request energy.  ``--precision`` selects each request's
+execution policy — ``fp32`` (GPU digital baseline energy), ``w8a8``
+(the analog MR-bank path, ~94x lower EPB) or ``w8a8+noise`` (8-bit plus
+the analog perturbation model); quantized runs also print the PSNR/MSE
+quality probe against the fp32 reference (the accuracy-vs-EPB frontier).
 """
 from __future__ import annotations
 
@@ -64,21 +69,23 @@ def serve_lm(cfg, mesh, batch: int, prompt_len: int, new_tokens: int,
 
 
 def poisson_trace(n: int, rate_hz: float, steps: int, seed: int = 0,
-                  slo_ms=None):
+                  slo_ms=None, precision: str = 'fp32'):
     """Poisson arrival trace: n requests, exponential inter-arrivals."""
     from repro.serving import GenerationRequest
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n))
     return [GenerationRequest(request_id=i, seed=1000 + i, steps=steps,
-                              arrival_time=float(a), slo_ms=slo_ms)
+                              arrival_time=float(a), slo_ms=slo_ms,
+                              precision=precision)
             for i, a in enumerate(arrivals)]
 
 
 def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
-                    slots: int, quant: bool = False, seed: int = 0,
-                    slo_ms=None):
+                    slots: int, precision: str = 'fp32', seed: int = 0,
+                    slo_ms=None, quality_probe: int = 1):
     """Replay a Poisson arrival trace through the continuous-batching
-    engine and print the serving + photonic-energy report."""
+    engine and print the serving + energy report, plus the per-policy
+    accuracy-vs-EPB frontier."""
     from repro.diffusion.pipeline import DiffusionPipeline
     from repro.models.unet import UNetConfig
     from repro.serving import ContinuousBatchingEngine
@@ -86,14 +93,16 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     cfg = UNetConfig('serve-diffusion', img_size=img, in_ch=3, base_ch=64,
                      ch_mults=(1, 2), n_res_blocks=1,
                      attn_resolutions=(img // 2,), n_heads=4, timesteps=100)
-    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg, quant=quant)
-    engine = ContinuousBatchingEngine(pipe, slots=slots)
-    print(f'[serve] warmup (compile)...', flush=True)
-    engine.warmup()
-    trace = poisson_trace(n_requests, rate_hz, steps, seed, slo_ms=slo_ms)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    engine = ContinuousBatchingEngine(pipe, slots=slots,
+                                      quality_probe=quality_probe)
+    print(f'[serve] warmup (compile, policy={precision})...', flush=True)
+    engine.warmup(precisions=(precision,))
+    trace = poisson_trace(n_requests, rate_hz, steps, seed, slo_ms=slo_ms,
+                          precision=precision)
     print(f'[serve] replaying {n_requests} requests at {rate_hz:.1f} req/s '
-          f'({slots} slots, {steps} DDIM steps, '
-          f'W8A8={"on" if quant else "off"})', flush=True)
+          f'({slots} slots, {steps} DDIM steps, precision={precision})',
+          flush=True)
     t0 = time.perf_counter()
     results = engine.replay(trace)
     makespan = time.perf_counter() - t0
@@ -102,8 +111,16 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
           f'({s["requests_per_s"]:.2f} req/s) '
           f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms '
           f'slo_viol={int(s["slo_violations"])}')
-    print(f'[difflight] {s["energy_per_request_mj"]:.2f} mJ/request '
-          f'({s["total_energy_mj"]:.1f} mJ total, simulated)')
+    src = 'simulated DiffLight' if precision != 'fp32' \
+        else 'GPU digital baseline'
+    print(f'[energy] {s["energy_per_request_mj"]:.2f} mJ/request '
+          f'({s["total_energy_mj"]:.1f} mJ total, {src})')
+    for name, pt in engine.metrics.frontier().items():
+        quality = '' if pt['probed'] == 0 else (
+            f'  psnr={pt["mean_psnr_db"]:.1f}dB mse={pt["mean_mse"]:.2e}'
+            f' (vs fp32 reference, {int(pt["probed"])} probed)')
+        print(f'[frontier] {name}: {pt["mean_epb_pj"]:.3f} pJ/bit  '
+              f'{pt["mean_energy_j"] * 1e3:.2f} mJ/request{quality}')
     return results
 
 
@@ -114,7 +131,16 @@ def main():
     ap.add_argument('--batch', type=int, default=2)
     ap.add_argument('--prompt', type=int, default=16)
     ap.add_argument('--tokens', type=int, default=16)
-    ap.add_argument('--w8a8', action='store_true')
+    ap.add_argument('--w8a8', action='store_true',
+                    help='LM mode: quantized matmuls; diffusion mode: '
+                         'deprecated alias for --precision w8a8')
+    ap.add_argument('--precision', default=None,
+                    choices=['fp32', 'w8a8', 'w8a8+noise'],
+                    help='diffusion request precision policy '
+                         '(default fp32; overrides --w8a8)')
+    ap.add_argument('--quality-probe', type=int, default=1,
+                    help='probe every k-th quantized request against the '
+                         'fp32 reference (0 = off)')
     ap.add_argument('--diffusion', action='store_true',
                     help='serve diffusion requests (continuous batching)')
     ap.add_argument('--requests', type=int, default=8)
@@ -127,8 +153,10 @@ def main():
     ap.add_argument('--slo-ms', type=float, default=None)
     args = ap.parse_args()
     if args.diffusion:
+        precision = args.precision or ('w8a8' if args.w8a8 else 'fp32')
         serve_diffusion(args.img, args.steps, args.requests, args.rate,
-                        args.slots, quant=args.w8a8, slo_ms=args.slo_ms)
+                        args.slots, precision=precision, slo_ms=args.slo_ms,
+                        quality_probe=args.quality_probe)
         return
     cfg = smoke_config(args.arch) if args.preset == 'smoke' \
         else get(args.arch)

@@ -51,15 +51,30 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = True,
     return p
 
 
-def linear(p: Params, x: jax.Array, *, dtype=None,
-           quant: bool = False) -> jax.Array:
-    """y = x @ w + b.  ``quant=True`` routes through the W8A8 path
-    (DiffLight C1)."""
+def linear(p: Params, x: jax.Array, *, dtype=None, quant: bool = False,
+           policy=None, noise_key=None) -> jax.Array:
+    """y = x @ w + b, executed per the precision policy.
+
+    ``policy`` (a ``repro.core.precision.PrecisionPolicy`` or name)
+    selects fp32 / W8A8 (DiffLight C1) / W8A8 with analog noise; a noisy
+    policy draws perturbations from ``noise_key`` (falling back to the
+    policy's ``noise_seed`` anchor).  ``quant=True`` is the deprecated
+    boolean form of ``policy=PrecisionPolicy.w8a8()``.
+    """
+    from repro.core.precision import resolve
+    pol = resolve(policy, quant)
     dtype = dtype or x.dtype
     w = p['w']
-    if quant or isinstance(w, QTensor):
-        from repro.kernels import ops as kops
-        y = kops.w8a8_matmul(x, w).astype(dtype)
+    if pol.quantized or isinstance(w, QTensor):
+        if pol.noisy:
+            from repro.core.photonic.noise import noisy_w8a8_matmul
+            key = noise_key if noise_key is not None else \
+                jax.random.PRNGKey(pol.noise_seed)
+            y = noisy_w8a8_matmul(key, x, w, model=pol.noise,
+                                  n_channels=pol.n_channels).astype(dtype)
+        else:
+            from repro.kernels import ops as kops
+            y = kops.w8a8_matmul(x, w).astype(dtype)
     else:
         # bf16 compute keeps bf16 HBM layout (MXU accumulates f32
         # internally); only f32 compute asks for an f32 accumulator output.

@@ -3,8 +3,11 @@
 Encoder/decoder ResBlocks with GroupNorm+swish (fused kernel, C5), MHA
 blocks with the LSE softmax (C2), optional cross-attention (SDM text
 conditioning), and stride-2 transposed-conv upsampling routed through the
-sparsity-aware dataflow (C4).  ``quant=True`` runs every linear/1x1-conv
-through the W8A8 path (C1) — the serving configuration the paper evaluates.
+sparsity-aware dataflow (C4).  A w8a8 ``PrecisionPolicy`` (see
+``repro.core.precision``) runs every attention projection through the
+W8A8 path (C1), optionally with analog-noise injection — the serving
+configurations the paper evaluates.  The legacy ``quant=True`` flag is a
+deprecated alias for ``policy=PrecisionPolicy.w8a8()``.
 """
 from __future__ import annotations
 
@@ -114,19 +117,29 @@ def _mha(q, k, v, n_heads: int, quant_proj=None) -> jax.Array:
 
 def attn_block(p, x: jax.Array, groups: int, n_heads: int,
                context: Optional[jax.Array] = None,
-               quant: bool = False) -> jax.Array:
+               policy=None, keys=None) -> jax.Array:
+    """``policy`` selects the matmul precision for every projection (a
+    PrecisionPolicy; the legacy positional bool still resolves).  ``keys``
+    is a NoiseKeyStream dispensing one key per projection when the policy
+    injects analog noise — without one, a per-block stream anchored at the
+    policy's seed is used."""
+    from repro.core.precision import resolve, stream_for
+    pol = resolve(policy)
+    if keys is None:
+        keys = stream_for(pol)
     B, H, W, C = x.shape
     h = L.groupnorm(p['gn'], x, groups)
     t = h.reshape(B, H * W, C)
-    o = _mha(L.linear(p['wq'], t, quant=quant),
-             L.linear(p['wk'], t, quant=quant),
-             L.linear(p['wv'], t, quant=quant), n_heads)
-    t = t + L.linear(p['wo'], o, quant=quant)
+
+    def proj(q, v):
+        return L.linear(q, v, policy=pol, noise_key=keys.next())
+
+    o = _mha(proj(p['wq'], t), proj(p['wk'], t), proj(p['wv'], t), n_heads)
+    t = t + proj(p['wo'], o)
     if context is not None and 'xq' in p:
-        o = _mha(L.linear(p['xq'], t, quant=quant),
-                 L.linear(p['xk'], context, quant=quant),
-                 L.linear(p['xv'], context, quant=quant), n_heads)
-        t = t + L.linear(p['xo'], o, quant=quant)
+        o = _mha(proj(p['xq'], t), proj(p['xk'], context),
+                 proj(p['xv'], context), n_heads)
+        t = t + proj(p['xo'], o)
     return x + t.reshape(B, H, W, C)
 
 
@@ -195,8 +208,19 @@ def init_unet(key, cfg: UNetConfig) -> Dict[str, Any]:
 
 def unet_apply(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
                context: Optional[jax.Array] = None,
-               quant: bool = False) -> jax.Array:
-    """x (B, H, W, C_in), t (B,) int timesteps -> predicted noise."""
+               quant: bool = False, *, policy=None,
+               noise_key=None) -> jax.Array:
+    """x (B, H, W, C_in), t (B,) int timesteps -> predicted noise.
+
+    ``policy`` is the PrecisionPolicy for every attention projection
+    (fp32 / w8a8 / w8a8+noise); ``quant=True`` is its deprecated boolean
+    ancestor.  A noisy policy draws one independent perturbation per
+    projection from ``noise_key`` (default: the policy's seed anchor),
+    so the whole forward is deterministic under a fixed key.
+    """
+    from repro.core.precision import resolve, stream_for
+    pol = resolve(policy, quant)
+    keys = stream_for(pol, noise_key)
     g = cfg.groups
     t_emb = timestep_embedding(t, cfg.base_ch)
     t_emb = L.linear(p['t_mlp2'], L.swish(L.linear(p['t_mlp1'], t_emb)))
@@ -206,20 +230,20 @@ def unet_apply(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
         for b in lvl_p['blocks']:
             h = resblock(b['res'], h, t_emb, g)
             if 'attn' in b:
-                h = attn_block(b['attn'], h, g, cfg.n_heads, context, quant)
+                h = attn_block(b['attn'], h, g, cfg.n_heads, context, pol, keys)
             skips.append(h)
         if 'down' in lvl_p:
             h = L.conv2d(lvl_p['down'], h, stride=2)
             skips.append(h)
     h = resblock(p['mid']['res1'], h, t_emb, g)
-    h = attn_block(p['mid']['attn'], h, g, cfg.n_heads, context, quant)
+    h = attn_block(p['mid']['attn'], h, g, cfg.n_heads, context, pol, keys)
     h = resblock(p['mid']['res2'], h, t_emb, g)
     for lvl_p in p['up']:
         for b in lvl_p['blocks']:
             h = jnp.concatenate([h, skips.pop()], axis=-1)
             h = resblock(b['res'], h, t_emb, g)
             if 'attn' in b:
-                h = attn_block(b['attn'], h, g, cfg.n_heads, context, quant)
+                h = attn_block(b['attn'], h, g, cfg.n_heads, context, pol, keys)
         if 'upconv' in lvl_p:
             h = L.conv_transpose2d(lvl_p['upconv'], h, stride=2,
                                    sparse_dataflow=cfg.sparse_dataflow)

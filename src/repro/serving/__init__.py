@@ -1,24 +1,37 @@
-"""Continuous-batching diffusion serving with photonic energy accounting.
+"""Continuous-batching diffusion serving with photonic energy accounting
+and per-request precision selection.
 
 Quickstart::
 
     pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), unet_cfg)
     engine = ContinuousBatchingEngine(pipe, slots=8)
-    engine.warmup()
-    engine.submit(GenerationRequest(request_id=0, seed=42, steps=50))
+    engine.warmup(precisions=('fp32', 'w8a8'))   # one compile per policy
+    engine.submit(GenerationRequest(request_id=0, seed=42, steps=50,
+                                    precision='w8a8'))
     while engine.busy:
         for result in engine.tick():
-            ...  # result.image, result.latency_s, result.energy_j
+            ...  # result.image, result.energy_j, result.quality_psnr_db
+    engine.metrics.snapshot().frontier   # accuracy-vs-EPB, per policy
+
+``precision`` is per request (``'fp32' | 'w8a8' | 'w8a8+noise'``); the
+engine groups compatible precisions per tick, so mixing them never
+recompiles.  Quantized results carry PSNR/MSE against the fp32 reference
+plus the DiffLight energy; fp32 results are billed the GPU digital
+baseline — together they form the frontier in every metrics snapshot.
 """
+from repro.core.precision import PrecisionPolicy
 from repro.serving.api import GenerationRequest, GenerationResult
 from repro.serving.batcher import (Bucket, BucketRouter, bucket_for,
-                                   choose_slots)
+                                   choose_slots, group_by_precision)
 from repro.serving.engine import ContinuousBatchingEngine
-from repro.serving.metrics import PhotonicAccountant, ServingMetrics
+from repro.serving.metrics import (FrontierPoint, PhotonicAccountant,
+                                   ServingMetrics)
 from repro.serving.queue import AdmissionQueue
 
 __all__ = [
     'GenerationRequest', 'GenerationResult', 'ContinuousBatchingEngine',
     'AdmissionQueue', 'ServingMetrics', 'PhotonicAccountant',
+    'PrecisionPolicy', 'FrontierPoint',
     'Bucket', 'BucketRouter', 'bucket_for', 'choose_slots',
+    'group_by_precision',
 ]

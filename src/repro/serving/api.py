@@ -1,11 +1,17 @@
 """Request/response surface of the continuous-batching serving engine.
 
 A ``GenerationRequest`` is one user's image: its own seed, its own DDIM
-step count, its own guidance scale and an optional latency SLO.  The
-engine multiplexes many of these into fixed-shape UNet step calls; a
-``GenerationResult`` carries the decoded image plus the per-request
-latency breakdown and the photonic energy the DiffLight simulator
-attributes to exactly this request's denoising work.
+step count, its own guidance scale, an optional latency SLO — and its own
+*precision*.  ``precision`` picks the accuracy-vs-energy point the
+paper's analog photonic compute exposes: ``"fp32"`` (digital baseline),
+``"w8a8"`` (the 8-bit MR-bank path, ~2 orders of magnitude lower EPB) or
+``"w8a8+noise"`` (8-bit plus the analog perturbation model).  The engine
+multiplexes many requests into fixed-shape UNet step calls, grouping
+compatible precisions per tick; a ``GenerationResult`` carries the
+decoded image plus the latency breakdown, the resolved
+``PrecisionPolicy``, the photonic energy attributed to exactly this
+request's denoising work, and — for sampled quantized requests — the
+quality delta (PSNR/MSE) against the fp32 reference.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+from repro.core.precision import PRECISION_NAMES, PrecisionPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,7 +31,9 @@ class GenerationRequest:
     clock (seconds; used by trace replay).  ``priority``: larger values
     are admitted first; FIFO within a class.  ``slo_ms``: optional
     end-to-end latency objective — violations are tallied in the
-    metrics, never enforced by dropping work.
+    metrics, never enforced by dropping work.  ``precision``: one of
+    ``'fp32' | 'w8a8' | 'w8a8+noise'`` — the execution policy for this
+    request's UNet evaluations.
     """
     request_id: int
     seed: int
@@ -32,15 +42,27 @@ class GenerationRequest:
     priority: int = 0
     arrival_time: float = 0.0
     slo_ms: Optional[float] = None
+    precision: str = 'fp32'
 
     def __post_init__(self):
         if self.steps < 1:
             raise ValueError(f'request {self.request_id}: steps must be >=1')
+        if self.precision not in PRECISION_NAMES:
+            raise ValueError(
+                f'request {self.request_id}: unknown precision '
+                f'{self.precision!r} (expected one of {PRECISION_NAMES})')
 
 
 @dataclasses.dataclass
 class GenerationResult:
-    """Completed request: image plus timing and energy accounting."""
+    """Completed request: image plus timing, energy and quality accounting.
+
+    ``policy`` is the resolved ``PrecisionPolicy`` the engine executed
+    this request under.  ``quality_psnr_db`` / ``quality_mse`` compare
+    the served output against the fp32 reference for the same
+    seed/steps/guidance — populated for quality-probed quantized
+    requests, ``None`` otherwise (fp32 requests ARE the reference).
+    """
     request_id: int
     image: np.ndarray
     steps: int
@@ -49,6 +71,10 @@ class GenerationResult:
     finish_time: float
     energy_j: float = 0.0          # simulated DiffLight energy, this request
     epb_pj: float = 0.0            # energy-per-bit of the same workload
+    precision: str = 'fp32'
+    policy: Optional[PrecisionPolicy] = None
+    quality_psnr_db: Optional[float] = None
+    quality_mse: Optional[float] = None
 
     @property
     def queue_delay_s(self) -> float:

@@ -1,20 +1,28 @@
-"""Bucketing and slot-count policy.
+"""Bucketing, slot-count policy and per-tick precision grouping.
 
 A fixed-shape engine can only multiplex requests that agree on the
 latent shape and model, so a fleet keys engines by ``Bucket`` —
-(model name, resolution, channels).  ``choose_slots`` sizes an engine's
-slot buffer from the offered load via Little's law: the steady-state
-number of in-flight requests is arrival_rate x service_time; headroom
-comes from the target utilization.
+(model name, resolution, channels).  Precision is deliberately NOT part
+of the bucket: one engine serves fp32 and w8a8 requests side by side by
+grouping compatible-precision slots per tick (``group_by_precision``)
+and running one pre-compiled step per group — mixed-precision arrivals
+never force a recompile.  ``choose_slots`` sizes an engine's slot buffer
+from the offered load via Little's law; it accepts either scalar load
+terms or per-precision mappings (quantized steps are cheaper, so a
+precision mix changes the in-flight occupancy).
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Sequence, TYPE_CHECKING
+
+import numpy as np
 
 from repro.serving.api import GenerationRequest, GenerationResult
-from repro.serving.engine import ContinuousBatchingEngine
+
+if TYPE_CHECKING:                                      # pragma: no cover
+    from repro.serving.engine import ContinuousBatchingEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,14 +36,47 @@ def bucket_for(unet_cfg) -> Bucket:
     return Bucket(unet_cfg.name, unet_cfg.img_size, unet_cfg.in_ch)
 
 
-def choose_slots(arrival_rate_hz: float, step_time_s: float,
-                 mean_steps: float, target_util: float = 0.8,
-                 max_slots: int = 64) -> int:
+def group_by_precision(
+        precisions: Sequence[Optional[str]]) -> Dict[str, np.ndarray]:
+    """Per-tick grouping of occupied slots by precision policy.
+
+    ``precisions[i]`` is slot i's request precision (None = free slot).
+    Returns {precision: bool mask over slots}.  The engine runs one
+    pre-compiled step per group, masking the other groups' slots out —
+    fixed shapes, so serving any precision mix needs zero recompiles
+    after one warmup per policy.
+    """
+    groups: Dict[str, np.ndarray] = {}
+    for i, name in enumerate(precisions):
+        if name is None:
+            continue
+        mask = groups.setdefault(name, np.zeros(len(precisions), bool))
+        mask[i] = True
+    return groups
+
+
+def _per_precision(value, key):
+    return value[key] if isinstance(value, Mapping) else value
+
+
+def choose_slots(arrival_rate_hz, step_time_s, mean_steps,
+                 target_util: float = 0.8, max_slots: int = 64) -> int:
     """Little's law slot sizing: L = lambda x W, W ~ steps x step_time.
 
-    Returns the slot count that keeps expected occupancy at
-    ``target_util`` of the buffer, clamped to [1, max_slots].
+    Each load term may be a scalar or a per-precision mapping (e.g.
+    ``arrival_rate_hz={'fp32': 1.0, 'w8a8': 4.0}`` with per-precision
+    step times); precisions share one slot buffer, so their expected
+    in-flight counts add.  Returns the slot count that keeps expected
+    occupancy at ``target_util`` of the buffer, clamped to [1, max_slots].
     """
+    if isinstance(arrival_rate_hz, Mapping):
+        in_flight = sum(
+            rate * _per_precision(mean_steps, k) * _per_precision(
+                step_time_s, k)
+            for k, rate in arrival_rate_hz.items() if rate > 0)
+        if in_flight <= 0:
+            return 1
+        return max(1, min(max_slots, math.ceil(in_flight / target_util)))
     if arrival_rate_hz <= 0 or step_time_s <= 0 or mean_steps <= 0:
         return 1
     in_flight = arrival_rate_hz * mean_steps * step_time_s
@@ -46,16 +87,16 @@ class BucketRouter:
     """Routes requests to per-bucket engines and drives them together."""
 
     def __init__(self):
-        self._engines: Dict[Bucket, ContinuousBatchingEngine] = {}
+        self._engines: Dict[Bucket, 'ContinuousBatchingEngine'] = {}
 
-    def register(self, engine: ContinuousBatchingEngine) -> Bucket:
+    def register(self, engine: 'ContinuousBatchingEngine') -> Bucket:
         b = bucket_for(engine.pipe.unet_cfg)
         if b in self._engines:
             raise ValueError(f'bucket {b} already registered')
         self._engines[b] = engine
         return b
 
-    def engine(self, bucket: Bucket) -> ContinuousBatchingEngine:
+    def engine(self, bucket: Bucket) -> 'ContinuousBatchingEngine':
         return self._engines[bucket]
 
     @property

@@ -1,45 +1,61 @@
-"""Continuous-batching diffusion engine: slot-based mixed-timestep steps.
+"""Continuous-batching diffusion engine: slot-based mixed-timestep steps
+with per-request precision policies.
 
 The engine owns a fixed ``(slots, H, W, C)`` latent buffer.  Each slot
 carries one in-flight request at its *own* DDIM step index — possible
 because every denoise step is a single UNet call with a per-sample
 timestep vector (``DiffusionPipeline.denoise_step``), so requests at
-different denoising depths share one jitted step.  Per tick:
+different denoising depths share one jitted step.  Each request also
+carries its own *precision* (``fp32`` / ``w8a8`` / ``w8a8+noise``); the
+engine resolves it to a frozen ``PrecisionPolicy`` and keeps one jitted
+step per (policy, guided) pair.  Per tick:
 
   1. free slots are refilled from the admission queue (each new request's
      initial noise is derived from its own seed, exactly as
      ``samplers.ddim_sample`` would);
-  2. ONE fixed-shape mixed-timestep UNet step advances every active slot
-     (inactive slots are masked out, their latents unchanged);
+  2. active slots are grouped by precision (``batcher.group_by_precision``)
+     and ONE fixed-shape mixed-timestep UNet step per group advances that
+     group's slots (other slots are masked out, their latents unchanged) —
+     so a mixed-precision tick costs one pre-compiled call per distinct
+     policy, never a recompile;
   3. slots that reached the end of their trajectory drain through the
-     (fixed batch-1) VAE decode, report metrics + DiffLight energy, and
-     are immediately refillable.
+     (fixed batch-1) VAE decode, report metrics + policy-aware energy
+     (w8a8 rides the DiffLight simulation; fp32 is billed the GPU digital
+     baseline), and are immediately refillable.  Sampled quantized
+     requests additionally run an eager fp32 reference for the same
+     seed/steps/guidance and report PSNR/MSE against it — the per-request
+     points of the accuracy-vs-EPB frontier.
 
-Every device function is jitted once against fixed shapes — after the
-first tick touches each code path (step / place / take / decode) the
-engine performs ZERO recompilations, which ``compile_stats()`` exposes
-for tests to assert.
+Every device function is jitted once against fixed shapes — after one
+warmup per policy (``warmup(precisions=...)``) the engine performs ZERO
+recompilations, which ``compile_stats()`` exposes for tests to assert.
 
 Output equivalence: with eta=0 DDIM is deterministic given the initial
-noise, and the UNet treats batch elements independently, so a request
-served through the engine is numerically identical to running
-``DiffusionPipeline.generate(key=PRNGKey(seed), batch=1, steps=s)`` on
-its own (tests pin this at atol 1e-5).
+noise, and both the UNet and the per-row w8a8 activation scales treat
+batch elements independently, so a request served through the engine —
+at fp32 OR w8a8 — is numerically identical to running
+``DiffusionPipeline.generate(key=PRNGKey(seed), batch=1, steps=s,
+policy=...)`` on its own (tests pin this at atol 1e-5).  ``w8a8+noise``
+is deterministic under the engine's noise seed: two engines with the same
+seed and request sequence produce identical images.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.precision import PrecisionPolicy
 from repro.diffusion import samplers
 from repro.diffusion.pipeline import DiffusionPipeline
 from repro.models import autoencoder as AE
 from repro.serving.api import GenerationRequest, GenerationResult
+from repro.serving.batcher import group_by_precision
 from repro.serving.metrics import PhotonicAccountant, ServingMetrics
 from repro.serving.queue import AdmissionQueue, Queued
 
@@ -59,7 +75,13 @@ class ContinuousBatchingEngine:
                  context=None, queue: Optional[AdmissionQueue] = None,
                  metrics: Optional[ServingMetrics] = None,
                  photonic: Optional[PhotonicAccountant] = None,
-                 track_energy: bool = True):
+                 track_energy: bool = True,
+                 noise_model=None, noise_seed: int = 0,
+                 quality_probe: int = 1):
+        """``noise_model`` / ``noise_seed`` configure the ``w8a8+noise``
+        policy (defaults: the paper's analog perturbation model, seed 0).
+        ``quality_probe``: run the fp32 reference + PSNR/MSE probe for
+        every k-th completed quantized request (0 disables probing)."""
         if slots < 1:
             raise ValueError('need at least one slot')
         self.pipe = pipe
@@ -69,38 +91,23 @@ class ContinuousBatchingEngine:
         self.metrics = metrics or ServingMetrics()
         self.photonic = photonic or (
             PhotonicAccountant(pipe.unet_cfg) if track_energy else None)
+        self.noise_model = noise_model
+        self.noise_seed = noise_seed
+        self.quality_probe = quality_probe
         cfg = pipe.unet_cfg
         self._sample_shape = (cfg.img_size, cfg.img_size, cfg.in_ch)
         self.x = jnp.zeros((slots,) + self._sample_shape, jnp.float32)
         self._slot: List[Optional[_Active]] = [None] * slots
         self._traj: Dict[int, np.ndarray] = {}
         self._wall_t0 = 0.0          # wall-clock origin (set by replay)
+        self._quant_done = 0         # completed quantized requests (probe)
+        # precision machinery: policies and jitted steps are built lazily,
+        # one step per (precision, guided) pair, each closing over its
+        # frozen PrecisionPolicy — new policies never disturb compiled ones
+        self._policies: Dict[str, PrecisionPolicy] = {}
+        self._steps: Dict[Tuple[str, bool], 'jax.stages.Wrapped'] = {}
+        self._zero_key = jax.random.PRNGKey(0)     # inert key, fp32/w8a8
 
-        sched = pipe.sched
-
-        def make_step(use_guidance: bool):
-            def step(x, t, t_prev, active, guidance):
-                if use_guidance:
-                    # per-slot classifier-free guidance: blend against the
-                    # unconditional eps only for guided slots
-                    eps_c = pipe._eps_fn(self.context, 0.0)(x, t)
-                    eps_u = pipe._eps_fn(None, 0.0)(x, t)
-                    g = guidance.reshape((-1,) + (1,) * (x.ndim - 1))
-                    eps = jnp.where(g > 0, eps_u + g * (eps_c - eps_u),
-                                    eps_c)
-                    x_new = samplers.ddim_step(sched, eps, x, t, t_prev)
-                else:
-                    x_new = pipe.denoise_step(x, t, t_prev,
-                                              context=self.context)
-                mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
-                return jnp.where(mask, x_new, x)
-            return step
-
-        # guided ticks pay the extra unconditional UNet pass only when
-        # some active slot actually asked for guidance
-        self._step = jax.jit(make_step(False), donate_argnums=(0,))
-        self._step_guided = jax.jit(make_step(True), donate_argnums=(0,)) \
-            if context is not None else None
         # initial noise exactly as ddim_sample: x = normal(split(key)[0], .)
         self._init_noise = jax.jit(lambda key: jax.random.normal(
             jax.random.split(key)[0], (1,) + self._sample_shape)[0])
@@ -111,6 +118,63 @@ class ContinuousBatchingEngine:
                 pipe.vae_params, pipe.vae_cfg, z))
         else:
             self._decode = None
+
+    # -- precision machinery ------------------------------------------------
+    def _policy_for(self, name: str) -> PrecisionPolicy:
+        """Resolve a request's precision name to this engine's policy."""
+        if name not in self._policies:
+            if name == 'fp32':
+                pol = PrecisionPolicy.fp32()
+            elif name == 'w8a8':
+                cal = self.pipe.policy.calibration \
+                    if self.pipe.policy.quantized else 'dynamic'
+                pol = PrecisionPolicy.w8a8(calibration=cal)
+            else:  # 'w8a8+noise' (request validation guarantees the name)
+                pol = PrecisionPolicy.w8a8_noise(
+                    model=self.noise_model, noise_seed=self.noise_seed)
+            self._policies[name] = pol
+        return self._policies[name]
+
+    def _make_step(self, pol: PrecisionPolicy, use_guidance: bool):
+        pipe, sched = self.pipe, self.pipe.sched
+
+        def step(x, t, t_prev, active, guidance, key):
+            nkey = key if pol.noisy else None
+            if use_guidance:
+                # per-slot classifier-free guidance: blend against the
+                # unconditional eps only for guided slots.  Under a noisy
+                # policy the unconditional pass draws independent noise.
+                ukey = jax.random.fold_in(key, 1) if pol.noisy else None
+                eps_c = pipe._eps_fn(self.context, 0.0, policy=pol,
+                                     noise_key=nkey)(x, t)
+                eps_u = pipe._eps_fn(None, 0.0, policy=pol,
+                                     noise_key=ukey)(x, t)
+                g = guidance.reshape((-1,) + (1,) * (x.ndim - 1))
+                eps = jnp.where(g > 0, eps_u + g * (eps_c - eps_u), eps_c)
+                x_new = samplers.ddim_step(sched, eps, x, t, t_prev)
+            else:
+                x_new = pipe.denoise_step(x, t, t_prev, context=self.context,
+                                          policy=pol, noise_key=nkey)
+            mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(mask, x_new, x)
+        return step
+
+    def _get_step(self, precision: str, guided: bool):
+        k = (precision, guided)
+        if k not in self._steps:
+            pol = self._policy_for(precision)
+            self._steps[k] = jax.jit(self._make_step(pol, guided),
+                                     donate_argnums=(0,))
+        return self._steps[k]
+
+    def _tick_key(self, pol: PrecisionPolicy, tick_idx: int):
+        """Per-tick analog-noise key: the policy's seed anchor folded with
+        the tick index, so draws vary along every trajectory yet the whole
+        serving run is deterministic under (seed, request sequence)."""
+        if not pol.noisy:
+            return self._zero_key
+        return jax.random.fold_in(
+            jax.random.PRNGKey(pol.noise_seed), tick_idx)
 
     # -- introspection -----------------------------------------------------
     @property
@@ -123,10 +187,18 @@ class ContinuousBatchingEngine:
 
     def compile_stats(self) -> Dict[str, int]:
         """Per-jitted-function compile counts (cache sizes).  Constant
-        after warmup == zero recompilation."""
+        after one warmup per served policy == zero recompilation.  Step
+        entries are labeled ``_step`` / ``_step_guided`` for fp32 and
+        ``_step[w8a8]``-style for quantized policies."""
         out = {}
-        for name in ('_step', '_step_guided', '_init_noise', '_place',
-                     '_take', '_decode'):
+        for (pname, guided), fn in self._steps.items():
+            label = ('_step_guided' if guided else '_step') + (
+                '' if pname == 'fp32' else f'[{pname}]')
+            try:
+                out[label] = int(fn._cache_size())
+            except Exception:                      # pragma: no cover
+                out[label] = -1
+        for name in ('_init_noise', '_place', '_take', '_decode'):
             fn = getattr(self, name)
             if fn is None:
                 continue
@@ -165,6 +237,28 @@ class ContinuousBatchingEngine:
             noise = self._init_noise(jax.random.PRNGKey(req.seed))
             self.x = self._place(self.x, jnp.int32(idx), noise)
 
+    def _fp32_reference(self, req: GenerationRequest,
+                        guided: bool) -> np.ndarray:
+        """Eager fp32 generation for the same seed/steps/guidance — the
+        quality probe's reference image (context row 0 stands in for the
+        engine's shared conditioning)."""
+        ctx = self.context[:1] if (guided and self.context is not None) \
+            else None
+        ref = self.pipe.generate(
+            jax.random.PRNGKey(req.seed), batch=1, steps=req.steps,
+            context=ctx, guidance=req.guidance if guided else 0.0,
+            policy=PrecisionPolicy.fp32())
+        return np.asarray(ref[0])
+
+    @staticmethod
+    def _quality(image: np.ndarray, ref: np.ndarray):
+        """(mse, psnr_db) of the served image vs the fp32 reference."""
+        mse = float(np.mean((image.astype(np.float64) -
+                             ref.astype(np.float64)) ** 2))
+        rng = float(ref.max() - ref.min()) or 1.0
+        psnr = math.inf if mse <= 0.0 else 10.0 * math.log10(rng * rng / mse)
+        return mse, psnr
+
     def _drain(self, idx: int, now: float,
                wall_clock: bool = False) -> GenerationResult:
         a = self._slot[idx]
@@ -172,26 +266,39 @@ class ContinuousBatchingEngine:
         if self._decode is not None:
             z = self._decode(z)
         req = a.request
+        pol = self._policy_for(req.precision)
         guided = req.guidance > 0.0 and self.context is not None
         energy_j = epb = 0.0
         if self.photonic is not None:
-            energy_j, epb = self.photonic.energy(req.steps, guided)
+            energy_j, epb = self.photonic.energy(req.steps, guided,
+                                                 precision=req.precision)
         image = np.asarray(z[0])           # device sync: image materialized
         if wall_clock:
             # only now has the final step + decode actually executed
             now = time.perf_counter() - self._wall_t0
+        # quality probe AFTER the latency stamp: the eager fp32 reference
+        # is measurement apparatus, not served work
+        mse = psnr = None
+        if pol.quantized and self.quality_probe > 0:
+            if self._quant_done % self.quality_probe == 0:
+                mse, psnr = self._quality(
+                    image, self._fp32_reference(req, guided))
+            self._quant_done += 1
         res = GenerationResult(
             request_id=req.request_id, image=image,
             steps=req.steps, submit_time=a.submit_time,
             start_time=a.start_time, finish_time=now,
-            energy_j=energy_j, epb_pj=epb)
+            energy_j=energy_j, epb_pj=epb,
+            precision=req.precision, policy=pol,
+            quality_psnr_db=psnr, quality_mse=mse)
         self.metrics.record_complete(res, slo_ms=req.slo_ms)
         self._slot[idx] = None
         return res
 
     def tick(self, now: Optional[float] = None,
              wall_clock: Optional[bool] = None) -> List[GenerationResult]:
-        """Admit -> one mixed-timestep UNet step -> drain finished slots.
+        """Admit -> one mixed-timestep UNet step per precision group ->
+        drain finished slots.
 
         ``wall_clock`` (default: `now` not given) makes drained results
         re-stamp their finish time after the device sync, so reported
@@ -203,20 +310,30 @@ class ContinuousBatchingEngine:
             return []
         t = np.zeros(self.slots, np.int32)
         t_prev = np.full(self.slots, -1, np.int32)
-        active = np.zeros(self.slots, bool)
         guidance = np.zeros(self.slots, np.float32)
         for idx, a in enumerate(self._slot):
             if a is None:
                 continue
-            active[idx] = True
             t[idx] = a.ts[a.i]
             t_prev[idx] = a.ts[a.i + 1] if a.i + 1 < len(a.ts) else -1
             guidance[idx] = a.request.guidance
-        self.metrics.record_tick(int(active.sum()))
-        step_fn = self._step_guided if (self._step_guided is not None
-                                        and guidance.any()) else self._step
-        self.x = step_fn(self.x, jnp.asarray(t), jnp.asarray(t_prev),
-                         jnp.asarray(active), jnp.asarray(guidance))
+        groups = group_by_precision(
+            [a.request.precision if a is not None else None
+             for a in self._slot])
+        tick_idx = self.metrics.ticks
+        self.metrics.record_tick(
+            int(sum(m.sum() for m in groups.values())))
+        # one pre-compiled masked step per precision group; donated latent
+        # buffers chain group to group, so slots outside the running group
+        # pass through each call untouched
+        for pname in sorted(groups):
+            mask = groups[pname]
+            g = np.where(mask, guidance, 0.0).astype(np.float32)
+            guided = self.context is not None and bool(g.any())
+            step_fn = self._get_step(pname, guided)
+            key = self._tick_key(self._policy_for(pname), tick_idx)
+            self.x = step_fn(self.x, jnp.asarray(t), jnp.asarray(t_prev),
+                             jnp.asarray(mask), jnp.asarray(g), key)
         done: List[GenerationResult] = []
         for idx, a in enumerate(self._slot):
             if a is None:
@@ -264,20 +381,29 @@ class ContinuousBatchingEngine:
                                      wall_clock=True))
         raise RuntimeError('replay exceeded max_ticks')
 
-    def warmup(self) -> None:
-        """Compile every code path (step, place, take, decode) with a
-        throwaway request so serving ticks never pay compile time."""
+    def warmup(self, precisions=('fp32',)) -> None:
+        """Compile every code path (per-policy steps, place, take, decode)
+        with throwaway requests so serving ticks never pay compile time.
+        Pass every precision the engine will serve — e.g.
+        ``warmup(('fp32', 'w8a8', 'w8a8+noise'))`` — one step compile per
+        (policy, guided) pair, zero recompiles after."""
         saved_q, saved_m = self.queue, self.metrics
+        saved_probe = self.quality_probe
         self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
+        self.quality_probe = 0          # no fp32 references for throwaways
         try:
-            self.submit(GenerationRequest(request_id=-1, seed=0, steps=1),
-                        now=0.0)
-            self.run_until_idle(now=0.0)
-            if self._step_guided is not None:
-                # separately: the guided tick variant
-                self.submit(GenerationRequest(request_id=-2, seed=0,
-                                              steps=1, guidance=7.5),
-                            now=0.0)
+            for i, pname in enumerate(precisions):
+                self.submit(GenerationRequest(request_id=-(2 * i + 1),
+                                              seed=0, steps=1,
+                                              precision=pname), now=0.0)
                 self.run_until_idle(now=0.0)
+                if self.context is not None:
+                    # separately: the guided tick variant
+                    self.submit(GenerationRequest(request_id=-(2 * i + 2),
+                                                  seed=0, steps=1,
+                                                  guidance=7.5,
+                                                  precision=pname), now=0.0)
+                    self.run_until_idle(now=0.0)
         finally:
             self.queue, self.metrics = saved_q, saved_m
+            self.quality_probe = saved_probe

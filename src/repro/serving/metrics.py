@@ -1,27 +1,42 @@
-"""Serving metrics and per-request photonic energy accounting.
+"""Serving metrics, per-request photonic energy and the accuracy-vs-EPB
+frontier.
 
 ``PhotonicAccountant`` scales the UNet per-step operation counts
 (``core/photonic/workload.py``) by the number of UNet evaluations a
 request consumed (its DDIM steps, doubled under classifier-free
 guidance) and runs them through ``simulator.simulate`` — so every
 completed request reports the Joules DiffLight would have burned on it
-and the corresponding energy-per-bit.
+and the corresponding energy-per-bit.  Accounting is precision-aware:
+``w8a8`` / ``w8a8+noise`` requests ride the analog MR banks (the
+simulated DiffLight numbers); ``fp32`` requests cannot — they are
+attributed the paper's Fig. 10 GPU digital baseline (EPB anchored at
+94.18x DiffLight, 32-bit operands), which is exactly the energy gap the
+per-request precision knob trades against quality.
 
-``ServingMetrics`` keeps the queue/latency ledger: p50/p95 latency,
-requests/s over the completed window, tick/occupancy counters and SLO
-violations.  All counters are monotone in completed work.
+``ServingMetrics`` keeps the queue/latency ledger (p50/p95 latency,
+requests/s, tick/occupancy counters, SLO violations) plus the frontier:
+one ``FrontierPoint`` per completed request (precision, EPB, energy,
+PSNR/MSE vs the fp32 reference when probed) and per-policy aggregates
+surfaced in every snapshot.  All counters are monotone in completed work.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 from repro.serving.api import GenerationResult
 
+#: Fig. 10 anchor: DiffLight's average EPB improvement over the GPU
+#: (RTX 4070) digital baseline — what an fp32 request is billed per bit.
+FP32_DIGITAL_EPB_X = 94.18
+#: fp32 operands carry 4x the bits of the 8-bit analog datapath.
+FP32_BITS_X = 4.0
+
 
 class PhotonicAccountant:
-    """Per-request DiffLight energy: workload counts x simulate()."""
+    """Per-request energy: workload counts x simulate(), per precision."""
 
     def __init__(self, unet_cfg, arch_cfg=None, ctx_len: Optional[int] = 77):
         from repro.core.photonic.arch import PAPER_OPTIMUM
@@ -43,9 +58,31 @@ class PhotonicAccountant:
                 name=f'{self._per_step.name}/x{n_evals}')
         return self._cache[n_evals]
 
-    def energy(self, steps: int, guided: bool = False):
+    def energy(self, steps: int, guided: bool = False,
+               precision: str = 'w8a8'):
+        """(energy_j, epb_pj) for one request at the given precision.
+
+        Quantized precisions return the DiffLight simulation unchanged
+        (noise injection is free — the analog datapath is identical).
+        ``fp32`` scales EPB by the GPU digital anchor and energy by
+        anchor x 4 (32-bit vs 8-bit operands).
+        """
         rep = self.report(steps, guided)
+        if precision == 'fp32':
+            return (rep.energy_j * FP32_DIGITAL_EPB_X * FP32_BITS_X,
+                    rep.epb_pj * FP32_DIGITAL_EPB_X)
         return rep.energy_j, rep.epb_pj
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierPoint:
+    """One completed request on the accuracy-vs-energy frontier."""
+    request_id: int
+    precision: str
+    epb_pj: float
+    energy_j: float
+    psnr_db: Optional[float]       # vs fp32 reference; None if not probed
+    mse: Optional[float]
 
 
 @dataclasses.dataclass
@@ -61,6 +98,9 @@ class MetricsSnapshot:
     requests_per_s: float
     total_energy_j: float
     slo_violations: int
+    # accuracy-vs-EPB frontier: per-policy aggregates over completed work
+    frontier: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
 
 
 class ServingMetrics:
@@ -72,9 +112,11 @@ class ServingMetrics:
         self.total_energy_j = 0.0
         self.slo_violations = 0
         self.results: List[GenerationResult] = []
+        self.frontier_points: List[FrontierPoint] = []
         self._latencies: List[float] = []       # kept sorted
         self._first_submit: Optional[float] = None
         self._last_finish: Optional[float] = None
+        self._by_policy: Dict[str, Dict[str, float]] = {}
 
     # -- recording ---------------------------------------------------------
     def record_submit(self, now: float):
@@ -96,6 +138,22 @@ class ServingMetrics:
             else max(self._last_finish, res.finish_time)
         if slo_ms is not None and res.latency_s * 1e3 > slo_ms:
             self.slo_violations += 1
+        self.frontier_points.append(FrontierPoint(
+            request_id=res.request_id, precision=res.precision,
+            epb_pj=res.epb_pj, energy_j=res.energy_j,
+            psnr_db=res.quality_psnr_db, mse=res.quality_mse))
+        d = self._by_policy.setdefault(res.precision, {
+            'completed': 0.0, 'energy_j': 0.0, 'epb_sum': 0.0,
+            'probed': 0.0, 'psnr_sum': 0.0, 'mse_sum': 0.0})
+        d['completed'] += 1
+        d['energy_j'] += res.energy_j
+        d['epb_sum'] += res.epb_pj
+        if res.quality_mse is not None:
+            d['probed'] += 1
+            d['mse_sum'] += res.quality_mse
+            if res.quality_psnr_db is not None and \
+                    math.isfinite(res.quality_psnr_db):
+                d['psnr_sum'] += res.quality_psnr_db
 
     # -- reading -----------------------------------------------------------
     def percentile_latency(self, p: float) -> float:
@@ -113,6 +171,29 @@ class ServingMetrics:
         span = self._last_finish - self._first_submit
         return self.completed / max(span, 1e-9)
 
+    def frontier(self) -> Dict[str, Dict[str, float]]:
+        """Accuracy-vs-EPB frontier: per-policy means over completed work.
+
+        {precision: {completed, mean_epb_pj, mean_energy_j,
+                     mean_psnr_db, mean_mse, probed}} — PSNR/MSE means
+        run over quality-probed requests only (NaN when none probed).
+        """
+        out = {}
+        for name, d in self._by_policy.items():
+            n = max(d['completed'], 1.0)
+            probed = d['probed']
+            out[name] = {
+                'completed': d['completed'],
+                'probed': probed,
+                'mean_epb_pj': d['epb_sum'] / n,
+                'mean_energy_j': d['energy_j'] / n,
+                'mean_psnr_db': (d['psnr_sum'] / probed) if probed
+                else float('nan'),
+                'mean_mse': (d['mse_sum'] / probed) if probed
+                else float('nan'),
+            }
+        return out
+
     def snapshot(self, active_slots: int = 0,
                  queued: int = 0) -> MetricsSnapshot:
         return MetricsSnapshot(
@@ -123,7 +204,8 @@ class ServingMetrics:
             p95_latency_s=self.percentile_latency(95),
             requests_per_s=self.requests_per_s(),
             total_energy_j=self.total_energy_j,
-            slo_violations=self.slo_violations)
+            slo_violations=self.slo_violations,
+            frontier=self.frontier())
 
     def summary(self) -> Dict[str, float]:
         s = self.snapshot()

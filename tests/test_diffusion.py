@@ -157,3 +157,88 @@ def test_deepcache_baseline():
     assert rel < 0.2, rel
     f = deepcache_workload_factor(cfg, interval=5)
     assert 0.1 < f < 0.9
+
+
+# ---------------------------------------------------------------------------
+# precision-policy API (replaces the bare quant flag)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.quant
+def test_precision_policy_equals_deprecated_quant_flag():
+    """policy=PrecisionPolicy.w8a8() and the deprecated quant=True build
+    the SAME graph — bit-identical outputs — and the boolean spelling
+    warns."""
+    from repro.core.precision import PrecisionPolicy, resolve
+    p = init_unet(jax.random.PRNGKey(0), TINY)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3))
+    t = jnp.array([5, 11])
+    with pytest.warns(DeprecationWarning):
+        old = unet_apply(p, TINY, x, t, quant=True)
+    new = unet_apply(p, TINY, x, t, policy=PrecisionPolicy.w8a8())
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    with pytest.warns(DeprecationWarning):
+        assert resolve(None, True) == PrecisionPolicy.w8a8()
+
+
+@pytest.mark.quant
+def test_precision_policy_validation_and_names():
+    from repro.core.precision import (PRECISION_NAMES, PrecisionPolicy,
+                                      resolve)
+    assert set(PRECISION_NAMES) == {'fp32', 'w8a8', 'w8a8+noise'}
+    for name in PRECISION_NAMES:
+        pol = PrecisionPolicy.from_name(name)
+        assert pol.name == name
+        assert resolve(name) == pol              # str spelling resolves too
+    with pytest.raises(ValueError):
+        PrecisionPolicy.from_name('int4')
+    with pytest.raises(ValueError):
+        PrecisionPolicy(backend='fp8')
+    with pytest.raises(ValueError):
+        # noise model requires the quantized backend
+        from repro.core.photonic.noise import NoiseModel
+        PrecisionPolicy(backend='fp32', noise=NoiseModel())
+    # frozen + hashable: usable as a jit closure / dict key
+    assert hash(PrecisionPolicy.w8a8()) == hash(PrecisionPolicy.w8a8())
+
+
+@pytest.mark.quant
+def test_prequantize_calibration_matches_dynamic():
+    """Serve-time calibration: prequantized weights agree with the
+    dynamic w8a8 path to ~1 LSB (XLA constant-folds the in-graph weight
+    quantization differently, flipping round-tie int8 values)."""
+    from repro.core.precision import PrecisionPolicy
+    from repro.core.quantization import QTensor
+    from repro.diffusion.pipeline import DiffusionPipeline
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), TINY,
+                                  policy=PrecisionPolicy.w8a8())
+    pq = pipe.prequantize()
+    assert pq.policy.calibration == 'prequant'
+    n_q = sum(isinstance(l, QTensor) for l in
+              jax.tree_util.tree_leaves(
+                  pq.unet_params,
+                  is_leaf=lambda l: isinstance(l, QTensor)))
+    assert n_q > 0                       # attn projections became QTensors
+    a = pipe.generate(jax.random.PRNGKey(3), batch=1, steps=3)
+    b = pq.generate(jax.random.PRNGKey(3), batch=1, steps=3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+@pytest.mark.quant
+def test_noisy_policy_deterministic_in_pipeline():
+    """w8a8+noise generation is reproducible under the policy's seed and
+    differs across seeds."""
+    from repro.core.precision import PrecisionPolicy
+    from repro.diffusion.pipeline import DiffusionPipeline
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), TINY)
+    p0 = PrecisionPolicy.w8a8_noise(noise_seed=0)
+    p1 = PrecisionPolicy.w8a8_noise(noise_seed=1)
+    a = pipe.generate(jax.random.PRNGKey(2), batch=1, steps=3, policy=p0)
+    b = pipe.generate(jax.random.PRNGKey(2), batch=1, steps=3, policy=p0)
+    c = pipe.generate(jax.random.PRNGKey(2), batch=1, steps=3, policy=p1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(jnp.max(jnp.abs(a - c))) > 0.0
+    # and stays within the analog error envelope of the clean w8a8 path
+    q = pipe.generate(jax.random.PRNGKey(2), batch=1, steps=3,
+                      policy=PrecisionPolicy.w8a8())
+    rel = float(jnp.linalg.norm(a - q) / jnp.linalg.norm(q))
+    assert rel < 0.05, rel

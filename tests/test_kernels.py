@@ -108,3 +108,43 @@ def test_fused_gn_swish_matches_layer_composition():
     composed = L.swish(L.groupnorm(p, x, groups=8))
     np.testing.assert_allclose(np.asarray(fused), np.asarray(composed),
                                atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# analog-noise injection (the engine's w8a8+noise policy)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.quant
+def test_noisy_w8a8_deterministic_under_key():
+    """noisy_w8a8_matmul is a pure function of its key: the same key
+    reproduces the same analog draw (the serving engine relies on this
+    for reproducible w8a8+noise requests), different keys differ, and
+    the whole thing compiles (trace-time crosstalk constant)."""
+    from repro.core.photonic.noise import NoiseModel, noisy_w8a8_matmul
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 8, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    k1, k2 = jax.random.PRNGKey(7), jax.random.PRNGKey(8)
+    a = noisy_w8a8_matmul(k1, x, w)
+    b = noisy_w8a8_matmul(k1, x, w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = noisy_w8a8_matmul(k2, x, w)
+    assert float(jnp.max(jnp.abs(a - c))) > 0.0
+    # jit-compiled call agrees with the eager one
+    j = jax.jit(lambda k, xx, ww: noisy_w8a8_matmul(k, xx, ww))(k1, x, w)
+    np.testing.assert_allclose(np.asarray(j), np.asarray(a), atol=1e-5)
+
+
+@pytest.mark.quant
+def test_noisy_w8a8_collapses_to_plain_w8a8_at_zero_noise():
+    """With all noise sigmas ~0 and crosstalk off, the noisy matmul is
+    the plain W8A8 matmul."""
+    from repro.core.photonic.noise import NoiseModel, noisy_w8a8_matmul
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    quiet = NoiseModel(sigma_w_lsb=0.0, sigma_x_lsb=0.0, sigma_pd_lsb=0.0,
+                       crosstalk_db_per_channel=-1000.0)
+    y = noisy_w8a8_matmul(jax.random.PRNGKey(0), x, w, model=quiet)
+    ref_q = ops.w8a8_matmul(x, w)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref_q), atol=1e-5)

@@ -12,9 +12,11 @@ from repro.diffusion.samplers import ddim_sample, ddim_step, ddim_timesteps
 from repro.diffusion.schedule import linear_schedule
 from repro.models.autoencoder import VAEConfig
 from repro.models.unet import UNetConfig
+from repro.core.precision import PrecisionPolicy
 from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
                            GenerationRequest, PhotonicAccountant,
-                           BucketRouter, bucket_for, choose_slots)
+                           BucketRouter, bucket_for, choose_slots,
+                           group_by_precision)
 
 TINY = UNetConfig('tiny-serve', img_size=16, in_ch=3, base_ch=32,
                   ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
@@ -187,10 +189,19 @@ def test_photonic_energy_scales_with_steps(pipe):
     e6, _ = acct.energy(6)
     assert e6 == pytest.approx(3 * e2, rel=1e-6)
     assert acct.energy(2, guided=True)[0] == pytest.approx(2 * e2, rel=1e-6)
-    # engine results carry exactly the accountant's numbers
+    # engine results carry exactly the accountant's numbers — an fp32
+    # request is billed the GPU digital baseline, not the photonic path
+    e2_fp32, _ = acct.energy(2, precision='fp32')
     engine = ContinuousBatchingEngine(pipe, slots=1, photonic=acct)
     res = _drive(engine, {0: [GenerationRequest(0, seed=1, steps=2)]})
-    assert res[0].energy_j == pytest.approx(e2)
+    assert res[0].energy_j == pytest.approx(e2_fp32)
+    # quantized request on the same engine: the DiffLight number
+    engine2 = ContinuousBatchingEngine(pipe, slots=1, photonic=acct,
+                                       quality_probe=0)
+    res2 = _drive(engine2, {0: [GenerationRequest(1, seed=1, steps=2,
+                                                  precision='w8a8')]})
+    assert res2[0].energy_j == pytest.approx(e2)
+    assert res2[0].energy_j < res[0].energy_j / 100
 
 
 # ---------------------------------------------------------------------------
@@ -233,3 +244,145 @@ def test_bucket_router_routes_and_ticks(pipe):
     assert [r.request_id for r in out] == [0]
     with pytest.raises(ValueError):
         router.register(ContinuousBatchingEngine(pipe, slots=1))
+
+
+# ---------------------------------------------------------------------------
+# precision policies: the quantized photonic fast path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.quant
+@pytest.mark.smoke
+def test_w8a8_engine_matches_standalone_quant_pipeline(pipe):
+    """A w8a8 request through the engine matches the standalone
+    quant=True DDIM pipeline (the deprecated boolean spelling) for the
+    same seed/steps.  Per-row activation scales keep batch elements
+    independent, so the math is identical; the tolerance is ~1 LSB of
+    the 8-bit datapath (atol 1e-3), because XLA fuses the row-scale
+    reduction differently for the engine's slot-batch shape than for
+    batch-1, and a ~1e-7 float difference in x/scale can flip one int8
+    rounding at a tie boundary."""
+    with pytest.warns(DeprecationWarning):
+        qpipe = DiffusionPipeline.init(jax.random.PRNGKey(0), TINY,
+                                       quant=True)
+    engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    reqs = [GenerationRequest(i, seed=40 + i, steps=s, precision='w8a8')
+            for i, s in enumerate([3, 5, 2])]
+    results = _drive(engine, {0: reqs[:2], 2: [reqs[2]]})
+    assert sorted(r.request_id for r in results) == [0, 1, 2]
+    for r in results:
+        ref = qpipe.generate(jax.random.PRNGKey(40 + r.request_id),
+                             batch=1, steps=r.steps)
+        np.testing.assert_allclose(r.image, np.asarray(ref[0]), atol=1e-3)
+        # and it ran the quant path, not fp32: strictly closer to the
+        # quantized reference than to the fp32 one
+        fp = pipe.generate(jax.random.PRNGKey(40 + r.request_id),
+                           batch=1, steps=r.steps)
+        d_quant = float(np.max(np.abs(r.image - np.asarray(ref[0]))))
+        d_fp32 = float(np.max(np.abs(r.image - np.asarray(fp[0]))))
+        assert d_quant < d_fp32
+        assert r.precision == 'w8a8' and r.policy.quantized
+
+
+@pytest.mark.quant
+def test_mixed_precision_ticks_zero_recompiles(pipe):
+    """One engine serving fp32 + w8a8 + w8a8+noise side by side: per-tick
+    precision grouping keeps every step call on a pre-compiled function —
+    compile stats are frozen after one warmup per policy."""
+    engine = ContinuousBatchingEngine(pipe, slots=3, quality_probe=0)
+    engine.warmup(precisions=('fp32', 'w8a8', 'w8a8+noise'))
+    warm = engine.compile_stats()
+    assert warm['_step'] == 1
+    assert warm['_step[w8a8]'] == 1
+    assert warm['_step[w8a8+noise]'] == 1
+    mix = ['fp32', 'w8a8', 'w8a8+noise']
+    reqs = [GenerationRequest(i, seed=60 + i, steps=2 + (i % 3),
+                              precision=mix[i % 3]) for i in range(6)]
+    results = _drive(engine, {0: reqs[:4], 2: reqs[4:]})
+    assert sorted(r.request_id for r in results) == list(range(6))
+    assert engine.compile_stats() == warm
+    # each request still matches its own standalone trajectory (fp32 at
+    # float precision; w8a8 to ~1 LSB — see the equivalence test above)
+    for r in results:
+        if r.precision == 'w8a8+noise':
+            continue
+        ref = pipe.generate(jax.random.PRNGKey(60 + r.request_id), batch=1,
+                            steps=r.steps,
+                            policy=PrecisionPolicy.from_name(r.precision))
+        atol = 1e-5 if r.precision == 'fp32' else 1e-3
+        np.testing.assert_allclose(r.image, np.asarray(ref[0]), atol=atol)
+
+
+@pytest.mark.quant
+def test_frontier_reports_accuracy_vs_epb(pipe):
+    """snapshot().frontier: quantized requests sit ~2 orders of magnitude
+    below fp32 in EPB and carry a PSNR/MSE quality probe vs the fp32
+    reference; fp32 requests ARE the reference (no probe)."""
+    engine = ContinuousBatchingEngine(pipe, slots=2)
+    engine.warmup(precisions=('fp32', 'w8a8'))
+    reqs = [GenerationRequest(0, seed=5, steps=3, precision='fp32'),
+            GenerationRequest(1, seed=5, steps=3, precision='w8a8')]
+    results = _drive(engine, {0: reqs})
+    by_id = {r.request_id: r for r in results}
+    assert by_id[0].quality_mse is None
+    assert by_id[1].quality_mse is not None and by_id[1].quality_mse >= 0
+    assert by_id[1].quality_psnr_db > 20          # tracks fp32 closely
+    snap = engine.metrics.snapshot()
+    f = snap.frontier
+    assert set(f) == {'fp32', 'w8a8'}
+    assert f['w8a8']['mean_epb_pj'] < f['fp32']['mean_epb_pj'] / 50
+    assert f['w8a8']['probed'] == 1
+    assert np.isnan(f['fp32']['mean_psnr_db'])
+    # per-request frontier points mirror the results
+    pts = {p.request_id: p for p in engine.metrics.frontier_points}
+    assert pts[1].psnr_db == by_id[1].quality_psnr_db
+    assert pts[0].epb_pj == by_id[0].epb_pj
+
+
+@pytest.mark.quant
+def test_noisy_engine_deterministic_under_seed(pipe):
+    """w8a8+noise serving is reproducible: identical engines and request
+    sequences produce bit-identical images; a different noise seed does
+    not."""
+    def run(noise_seed):
+        e = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0,
+                                     noise_seed=noise_seed)
+        reqs = [GenerationRequest(i, seed=70 + i, steps=3,
+                                  precision='w8a8+noise') for i in range(2)]
+        return {r.request_id: r.image for r in _drive(e, {0: reqs})}
+
+    a, b, c = run(0), run(0), run(1)
+    for i in a:
+        np.testing.assert_array_equal(a[i], b[i])
+    assert any(np.any(a[i] != c[i]) for i in a)
+
+
+@pytest.mark.quant
+@pytest.mark.smoke
+def test_request_precision_validation():
+    with pytest.raises(ValueError, match='precision'):
+        GenerationRequest(0, seed=1, precision='int4')
+    with pytest.raises(ValueError, match='precision'):
+        GenerationRequest(0, seed=1, precision='W8A8')   # case-sensitive
+    assert GenerationRequest(0, seed=1,
+                             precision='w8a8+noise').precision == 'w8a8+noise'
+
+
+def test_group_by_precision_masks():
+    groups = group_by_precision(['fp32', None, 'w8a8', 'fp32', None])
+    assert set(groups) == {'fp32', 'w8a8'}
+    np.testing.assert_array_equal(groups['fp32'],
+                                  [True, False, False, True, False])
+    np.testing.assert_array_equal(groups['w8a8'],
+                                  [False, False, True, False, False])
+    assert group_by_precision([None, None]) == {}
+
+
+def test_choose_slots_per_precision_mapping():
+    # per-precision load terms add across one shared slot buffer:
+    # fp32 1 req/s x 10 x 0.1s = 1.0; w8a8 4 req/s x 10 x 0.025s = 1.0
+    n = choose_slots({'fp32': 1.0, 'w8a8': 4.0},
+                     {'fp32': 0.1, 'w8a8': 0.025}, 10)
+    assert n == 3                                 # ceil(2.0 / 0.8)
+    # scalar step time broadcast over the mapping
+    assert choose_slots({'fp32': 2.0, 'w8a8': 2.0}, 0.05, 10) == 3
+    assert choose_slots({'fp32': 0.0}, 0.05, 10) == 1
