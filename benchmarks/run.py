@@ -1,6 +1,8 @@
 """Benchmark harness — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,value,unit`` CSV rows (the BENCH_*.json schema: each row
+is ``{name, value, unit}``; value is numeric wherever the quantity is,
+unit is the physical/logical unit string):
   * Table I   — model parameter counts + W8A8 quality proxy
   * Fig. 8    — energy ablation (baseline vs S/W-opt vs pipelined vs
                 DAC-sharing vs combined), per DM
@@ -13,14 +15,25 @@ Prints ``name,us_per_call,derived`` CSV rows:
                 staggered arrival trace (requests/s + per-request energy)
   * quant_serving — the precision-policy fast path: the same trace served
                 at fp32 vs w8a8 (requests/s, EPB, PSNR quality probe) plus
-                a mixed-precision zero-recompile check; rows also persist
-                to ``BENCH_PR6.json`` at the repo root
+                a mixed-precision zero-recompile check
+  * cache_serving — the cache- and convergence-aware scheduler: the same
+                Poisson trace served by the full-step engine vs the
+                DeepCache-phased + early-exit engine (requests/s speedup,
+                PSNR vs the full-step fp32 reference, per-request energy
+                with skip ticks billed at the shallow workload fraction)
+
+Rows persist to ``BENCH_PR7.json`` at the repo root.  Older
+``BENCH_PR*.json`` files used ``{name, us_per_call, derived}`` rows;
+``load_bench`` reads both shapes, and a regression guard warns when
+``serving/engine_rps`` drops more than 10% vs the newest prior file.
 
 Run everything (default) or name sections on argv:
-    PYTHONPATH=src python benchmarks/run.py quant_serving
+    PYTHONPATH=src python benchmarks/run.py cache_serving
 """
+import glob
 import json
 import os
+import re
 import sys
 import time
 
@@ -49,9 +62,9 @@ def bench_table1(emit):
             jax.random.PRNGKey(0), c))
         n = sum(int(np.prod(s.shape)) for s in
                 jax.tree_util.tree_leaves(shapes))
-        emit(f'table1/{name}/params_M', 0.0, f'{n/1e6:.2f}')
-        emit(f'table1/{name}/paper_params_M', 0.0,
-             f'{PAPER_PARAM_COUNTS[name]:.2f}')
+        emit(f'table1/{name}/params', round(n / 1e6, 2), 'Mparams')
+        emit(f'table1/{name}/paper_params',
+             round(PAPER_PARAM_COUNTS[name], 2), 'Mparams')
 
 
 def _workloads():
@@ -68,10 +81,11 @@ def bench_fig8(emit):
         ab = ablation(w)
         base = ab['baseline'].energy_j
         for k, r in ab.items():
-            emit(f'fig8/{name}/{k}/norm_energy', 0.0,
-                 f'{r.energy_j/base:.4f}')
+            emit(f'fig8/{name}/{k}/norm_energy',
+                 round(r.energy_j / base, 4), 'ratio')
         ratios.append(base / ab['combined'].energy_j)
-    emit('fig8/avg_combined_reduction_x', 0.0, f'{np.mean(ratios):.2f}')
+    emit('fig8/avg_combined_reduction', round(float(np.mean(ratios)), 2),
+         'x')
 
 
 def bench_fig9_fig10(emit):
@@ -81,16 +95,16 @@ def bench_fig9_fig10(emit):
     ws = _workloads()
     reps = {n: simulate(w, PAPER_OPTIMUM) for n, w in ws.items()}
     for n, r in reps.items():
-        emit(f'fig9/{n}/difflight_gops', 0.0, f'{r.gops:.1f}')
-        emit(f'fig10/{n}/difflight_epb_pj', 0.0, f'{r.epb_pj:.4f}')
+        emit(f'fig9/{n}/difflight_throughput', round(r.gops, 1), 'GOPS')
+        emit(f'fig10/{n}/difflight_epb', round(r.epb_pj, 4), 'pJ/bit')
     gops = float(np.mean([r.gops for r in reps.values()]))
     epb = float(np.mean([r.epb_pj for r in reps.values()]))
     for name, b in derive_baselines(gops, epb).items():
         key = name.split(' ')[0].lower().replace('_', '')
-        emit(f'fig9/baseline/{key}_gops', 0.0, f'{b.gops:.2f}')
-        emit(f'fig10/baseline/{key}_epb_pj', 0.0, f'{b.epb_pj:.4f}')
-        emit(f'fig9/improvement/{key}_x', 0.0, f'{gops/b.gops:.2f}')
-        emit(f'fig10/improvement/{key}_x', 0.0, f'{b.epb_pj/epb:.2f}')
+        emit(f'fig9/baseline/{key}_throughput', round(b.gops, 2), 'GOPS')
+        emit(f'fig10/baseline/{key}_epb', round(b.epb_pj, 4), 'pJ/bit')
+        emit(f'fig9/improvement/{key}', round(gops / b.gops, 2), 'x')
+        emit(f'fig10/improvement/{key}', round(b.epb_pj / epb, 2), 'x')
 
 
 def bench_deepcache(emit):
@@ -104,14 +118,14 @@ def bench_deepcache(emit):
     from repro.diffusion.deepcache import deepcache_workload_factor
     for name, cfg in PAPER_MODELS.items():
         f = deepcache_workload_factor(cfg, interval=5)
-        emit(f'deepcache/{name}/mac_factor', 0.0, f'{f:.3f}')
+        emit(f'deepcache/{name}/mac_factor', round(f, 3), 'ratio')
     # DiffLight running the DeepCache-reduced workload: compounding check
     w = unet_workload(PAPER_MODELS['ddpm_cifar10'])
     f = deepcache_workload_factor(PAPER_MODELS['ddpm_cifar10'], 5)
     r_full = simulate(w, PAPER_OPTIMUM)
     r_dc = simulate(w.scale(f), PAPER_OPTIMUM)
-    emit('deepcache/difflight_compound_energy_x', 0.0,
-         f'{r_full.energy_j / r_dc.energy_j:.2f}')
+    emit('deepcache/difflight_compound_energy',
+         round(r_full.energy_j / r_dc.energy_j, 2), 'x')
 
 
 def bench_dse(emit):
@@ -134,10 +148,12 @@ def bench_dse(emit):
     pct = float(np.searchsorted(-np.asarray([s for s, _ in scored]),
                                 -mine)) / len(scored)
     best = scored[0][1]
-    emit('dse/n_configs', dt, str(len(scored)))
-    emit('dse/paper_config_percentile', 0.0, f'{pct:.3f}')
-    emit('dse/our_optimum', 0.0,
-         f'[{best.Y} {best.N} {best.K} {best.H} {best.L} {best.M}]')
+    emit('dse/n_configs', len(scored), 'configs')
+    emit('dse/sweep_time', round(dt, 1), 'us')
+    emit('dse/paper_config_percentile', round(pct, 3), 'fraction')
+    emit('dse/our_optimum',
+         f'[{best.Y} {best.N} {best.K} {best.H} {best.L} {best.M}]',
+         'config')
 
 
 def bench_kernels(emit):
@@ -149,16 +165,16 @@ def bench_kernels(emit):
     w = jnp.asarray(rng.normal(size=(512, 256)), jnp.float32)
     f32 = jax.jit(lambda: x @ w)
     q = jax.jit(lambda: ops.w8a8_matmul(x, w, mode='xla'))
-    emit('kernels/matmul_f32', _timeit(f32), 'baseline')
-    emit('kernels/w8a8_matmul_xla', _timeit(q), 'C1')
+    emit('kernels/matmul_f32', round(_timeit(f32), 1), 'us')
+    emit('kernels/w8a8_matmul_xla', round(_timeit(q), 1), 'us')
     qq = jnp.asarray(rng.normal(size=(2, 4, 128, 64)), jnp.float32)
     kk = jnp.asarray(rng.normal(size=(2, 4, 256, 64)), jnp.float32)
     fa = jax.jit(lambda: ops.flash_attention(qq, kk, kk, mode='xla'))
-    emit('kernels/flash_attention_xla', _timeit(fa), 'C2')
+    emit('kernels/flash_attention_xla', round(_timeit(fa), 1), 'us')
     img = jnp.asarray(rng.normal(size=(2, 32, 32, 64)), jnp.float32)
     sc = jnp.ones((64,))
     gs = jax.jit(lambda: ops.fused_gn_swish(img, sc, sc, mode='xla'))
-    emit('kernels/fused_gn_swish_xla', _timeit(gs), 'C5')
+    emit('kernels/fused_gn_swish_xla', round(_timeit(gs), 1), 'us')
     # C4: sparse vs dense transposed conv wall time (CPU)
     from repro.core import sparse_dataflow as SD
     xc = jnp.asarray(rng.normal(size=(2, 32, 32, 64)), jnp.float32)
@@ -166,8 +182,9 @@ def bench_kernels(emit):
     dense = jax.jit(lambda: SD.conv_transpose_dense(xc, ker, 2))
     sparse = jax.jit(lambda: SD.conv_transpose_sparse(xc, ker, 2))
     td, ts = _timeit(dense), _timeit(sparse)
-    emit('kernels/convt_dense', td, 'C4 baseline')
-    emit('kernels/convt_sparse', ts, f'C4 speedup={td/max(ts,1e-9):.2f}x')
+    emit('kernels/convt_dense', round(td, 1), 'us')
+    emit('kernels/convt_sparse', round(ts, 1), 'us')
+    emit('kernels/convt_sparse_speedup', round(td / max(ts, 1e-9), 2), 'x')
 
 
 def bench_serving(emit):
@@ -214,13 +231,13 @@ def bench_serving(emit):
     base_rps = N / base_makespan
     eng_rps = N / makespan
     s = engine.metrics.summary()
-    emit('serving/batch_at_once_rps', t_batch * 1e6, f'{base_rps:.3f}')
-    emit('serving/engine_rps', makespan / N * 1e6, f'{eng_rps:.3f}')
-    emit('serving/speedup_x', 0.0, f'{eng_rps / base_rps:.2f}')
-    emit('serving/p50_latency_ms', 0.0, f'{s["p50_latency_ms"]:.1f}')
-    emit('serving/p95_latency_ms', 0.0, f'{s["p95_latency_ms"]:.1f}')
-    emit('serving/energy_per_request_mj', 0.0,
-         f'{s["energy_per_request_mj"]:.3f}')
+    emit('serving/batch_at_once_rps', round(base_rps, 3), 'req/s')
+    emit('serving/engine_rps', round(eng_rps, 3), 'req/s')
+    emit('serving/speedup', round(eng_rps / base_rps, 2), 'x')
+    emit('serving/p50_latency', round(s['p50_latency_ms'], 1), 'ms')
+    emit('serving/p95_latency', round(s['p95_latency_ms'], 1), 'ms')
+    emit('serving/energy_per_request',
+         round(s['energy_per_request_mj'], 3), 'mJ')
 
 
 def bench_quant_serving(emit):
@@ -261,20 +278,22 @@ def bench_quant_serving(emit):
     fp32_rps, fp32_f = serve('fp32')
     w8a8_rps, w8a8_f = serve('w8a8')
     _, w8a8_q = serve('w8a8', n=2, quality_probe=1)    # quality pass
-    emit('quant_serving/fp32_rps', 0.0, f'{fp32_rps:.3f}')
-    emit('quant_serving/w8a8_rps', 0.0, f'{w8a8_rps:.3f}')
-    emit('quant_serving/fp32_epb_pj', 0.0, f'{fp32_f["mean_epb_pj"]:.4f}')
-    emit('quant_serving/w8a8_epb_pj', 0.0, f'{w8a8_f["mean_epb_pj"]:.4f}')
-    emit('quant_serving/fp32_energy_mj_per_req', 0.0,
-         f'{fp32_f["mean_energy_j"] * 1e3:.4f}')
-    emit('quant_serving/w8a8_energy_mj_per_req', 0.0,
-         f'{w8a8_f["mean_energy_j"] * 1e3:.4f}')
-    emit('quant_serving/epb_improvement_x', 0.0,
-         f'{fp32_f["mean_epb_pj"] / w8a8_f["mean_epb_pj"]:.2f}')
-    emit('quant_serving/w8a8_psnr_db_vs_fp32', 0.0,
-         f'{w8a8_q["mean_psnr_db"]:.2f}')
-    emit('quant_serving/w8a8_mse_vs_fp32', 0.0,
-         f'{w8a8_q["mean_mse"]:.3e}')
+    emit('quant_serving/fp32_rps', round(fp32_rps, 3), 'req/s')
+    emit('quant_serving/w8a8_rps', round(w8a8_rps, 3), 'req/s')
+    emit('quant_serving/fp32_epb', round(fp32_f['mean_epb_pj'], 4),
+         'pJ/bit')
+    emit('quant_serving/w8a8_epb', round(w8a8_f['mean_epb_pj'], 4),
+         'pJ/bit')
+    emit('quant_serving/fp32_energy_per_req',
+         round(fp32_f['mean_energy_j'] * 1e3, 4), 'mJ')
+    emit('quant_serving/w8a8_energy_per_req',
+         round(w8a8_f['mean_energy_j'] * 1e3, 4), 'mJ')
+    emit('quant_serving/epb_improvement',
+         round(fp32_f['mean_epb_pj'] / w8a8_f['mean_epb_pj'], 2), 'x')
+    emit('quant_serving/w8a8_psnr_vs_fp32',
+         round(w8a8_q['mean_psnr_db'], 2), 'dB')
+    emit('quant_serving/w8a8_mse_vs_fp32',
+         float(f"{w8a8_q['mean_mse']:.3e}"), 'mse')
 
     # mixed-precision tick: every policy in one engine, zero recompiles
     engine = ContinuousBatchingEngine(pipe, slots=slots, quality_probe=0)
@@ -288,7 +307,84 @@ def bench_quant_serving(emit):
     results = engine.run_until_idle(now=0.0, tick_dt=0.01)
     assert len(results) == N
     ok = engine.compile_stats() == warm
-    emit('quant_serving/mixed_zero_recompiles', 0.0, str(ok).lower())
+    emit('quant_serving/mixed_zero_recompiles', int(ok), 'bool')
+
+
+def bench_cache_serving(emit):
+    """The cache- and convergence-aware scheduler's headline numbers:
+    the SAME Poisson trace served by (a) the PR6-style full-step engine
+    and (b) the DeepCache-phased engine with speculative early exit.
+
+    Reports the requests/s speedup, PSNR of the scheduled outputs vs the
+    full-step fp32 reference (quality probe), the per-request energy with
+    skip ticks billed at the shallow workload fraction of a full UNet
+    pass, and a zero-recompile check on the cached engine (the refresh /
+    skip pair is pre-compiled at warmup)."""
+    import jax
+    from repro.diffusion.pipeline import DiffusionPipeline
+    from repro.models.unet import UNetConfig
+    from repro.serving import ContinuousBatchingEngine, GenerationRequest
+    cfg = UNetConfig('bench-cserve', img_size=16, in_ch=3, base_ch=32,
+                     ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                     n_heads=4, timesteps=50)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    N, slots, steps = 8, 4, 12
+    interval, exit_tol, patience = 3, 0.005, 2
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(0.02, N))      # same Poisson trace
+
+    def trace():
+        return [GenerationRequest(request_id=i, seed=100 + i, steps=steps,
+                                  arrival_time=float(arrivals[i]))
+                for i in range(N)]
+
+    def serve(n=N, quality_probe=0, **knobs):
+        engine = ContinuousBatchingEngine(pipe, slots=slots,
+                                          quality_probe=quality_probe,
+                                          **knobs)
+        engine.warmup()
+        for req in trace()[:n]:
+            engine.submit(req, now=0.0)
+        warm = engine.compile_stats()
+        t0 = time.perf_counter()
+        results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+        makespan = time.perf_counter() - t0
+        assert len(results) == n
+        assert engine.compile_stats() == warm, 'recompiled mid-serve'
+        return n / makespan, engine.metrics
+
+    full_rps, full_m = serve()                              # PR6 baseline
+    cached_rps, cached_m = serve(cache_interval=interval, exit_tol=exit_tol,
+                                 exit_patience=patience)
+    # quality pass: probe the scheduled outputs against the eager
+    # full-step fp32 reference (probe excluded from the timed runs)
+    _, qual_m = serve(n=3, quality_probe=1, cache_interval=interval,
+                      exit_tol=exit_tol, exit_patience=patience)
+
+    s = cached_m.summary()
+    fq = qual_m.frontier()['fp32']
+    f_full = full_m.frontier()['fp32']
+    f_cached = cached_m.frontier()['fp32']
+    emit('cache_serving/full_step_rps', round(full_rps, 3), 'req/s')
+    emit('cache_serving/cached_rps', round(cached_rps, 3), 'req/s')
+    emit('cache_serving/speedup', round(cached_rps / full_rps, 2), 'x')
+    emit('cache_serving/cache_interval', interval, 'ticks')
+    emit('cache_serving/cache_hit_rate', round(s['cache_hit_rate'], 3),
+         'fraction')
+    emit('cache_serving/early_exits', int(s['early_exits']), 'requests')
+    emit('cache_serving/steps_saved', int(s['steps_saved']), 'steps')
+    emit('cache_serving/mean_steps_executed',
+         round(f_cached['mean_steps_executed'], 2), 'steps')
+    emit('cache_serving/full_energy_per_req',
+         round(f_full['mean_energy_j'] * 1e3, 4), 'mJ')
+    emit('cache_serving/cached_energy_per_req',
+         round(f_cached['mean_energy_j'] * 1e3, 4), 'mJ')
+    emit('cache_serving/energy_reduction',
+         round(f_full['mean_energy_j'] / f_cached['mean_energy_j'], 2),
+         'x')
+    emit('cache_serving/psnr_vs_full_fp32', round(fq['mean_psnr_db'], 2),
+         'dB')
+    emit('cache_serving/zero_recompiles', 1, 'bool')
 
 
 SECTIONS = {
@@ -300,30 +396,93 @@ SECTIONS = {
     'kernels': bench_kernels,
     'serving': bench_serving,
     'quant_serving': bench_quant_serving,
+    'cache_serving': bench_cache_serving,
 }
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          '..', 'BENCH_PR6.json')
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
+BENCH_JSON = os.path.join(ROOT, 'BENCH_PR7.json')
+
+
+def load_bench(path):
+    """Read a BENCH_*.json into {name: value}, accepting both row shapes:
+    the current ``{name, value, unit}`` and the pre-PR7
+    ``{name, us_per_call, derived}`` (where the quantity of record lived
+    in the ``derived`` string)."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for row in doc.get('rows', []):
+        if 'value' in row:
+            out[row['name']] = row['value']
+            continue
+        val = row.get('derived', '')
+        try:
+            val = float(val)
+        except (TypeError, ValueError):
+            pass
+        out[row['name']] = val
+    return out
+
+
+def _newest_prior_bench():
+    """Newest BENCH_PR<k>.json at the repo root other than the one this
+    run writes (highest k wins — the stacked-PR sequence is the clock)."""
+    best, best_k = None, -1
+    for path in glob.glob(os.path.join(ROOT, 'BENCH_PR*.json')):
+        if os.path.abspath(path) == os.path.abspath(BENCH_JSON):
+            continue
+        m = re.search(r'BENCH_PR(\d+)\.json$', path)
+        if m and int(m.group(1)) > best_k:
+            best, best_k = path, int(m.group(1))
+    return best
+
+
+def check_regression(rows, guard='serving/engine_rps', tol=0.10):
+    """Warn (never fail) when this run's ``guard`` metric dropped more
+    than ``tol`` vs the newest prior BENCH_PR*.json.  Returns the warning
+    string (also printed to stderr) or None."""
+    new = {name: val for name, val, _ in rows}
+    if guard not in new:
+        return None
+    prior = _newest_prior_bench()
+    if prior is None:
+        return None
+    try:
+        old = load_bench(prior).get(guard)
+        old = float(old) if old is not None else None
+        cur = float(new[guard])
+    except (TypeError, ValueError):
+        return None
+    if not old or old <= 0:
+        return None
+    if cur < (1.0 - tol) * old:
+        msg = (f'[benchmarks] WARNING: {guard} regressed '
+               f'{(1 - cur / old) * 100:.1f}% vs {os.path.basename(prior)}'
+               f' ({old:.3f} -> {cur:.3f} req/s)')
+        sys.stderr.write(msg + '\n')
+        return msg
+    return None
 
 
 def main() -> None:
     rows = []
 
-    def emit(name, us, derived):
-        rows.append((name, us, derived))
-        print(f'{name},{us:.1f},{derived}', flush=True)
+    def emit(name, value, unit):
+        rows.append((name, value, unit))
+        print(f'{name},{value},{unit}', flush=True)
 
     names = sys.argv[1:] or list(SECTIONS)
     unknown = [n for n in names if n not in SECTIONS]
     if unknown:
         sys.exit(f'unknown section(s) {unknown}; pick from {list(SECTIONS)}')
-    print('name,us_per_call,derived')
+    print('name,value,unit')
     for n in names:
         SECTIONS[n](emit)
+    check_regression(rows)
     with open(BENCH_JSON, 'w') as f:
         json.dump({'sections': names,
-                   'rows': [{'name': n, 'us_per_call': us, 'derived': d}
-                            for n, us, d in rows]}, f, indent=2)
+                   'rows': [{'name': n, 'value': v, 'unit': u}
+                            for n, v, u in rows]}, f, indent=2)
         f.write('\n')
     sys.stderr.write(f'[benchmarks] {len(rows)} rows -> {BENCH_JSON}\n')
 

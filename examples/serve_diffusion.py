@@ -31,6 +31,13 @@ requests as one naive batch-at-once call:
 
     PYTHONPATH=src python examples/serve_diffusion.py --requests 8 \
         --slots 4 --precision w8a8
+
+Two scheduler levers compound on top of continuous batching (see the
+README "Cache- and convergence-aware scheduling" section):
+``--cache-interval k`` turns on DeepCache-phased slotting (one full UNet
+pass every k ticks, shallow cached passes in between, all slots sharing
+one refresh cadence) and ``--exit-tol`` drains a request early once its
+x0 prediction stops moving between ticks.
 """
 import argparse
 import time
@@ -56,6 +63,14 @@ def main():
                     help='per-request precision policy')
     ap.add_argument('--fp32', action='store_true',
                     help='deprecated alias for --precision fp32')
+    ap.add_argument('--cache-interval', type=int, default=1,
+                    help='DeepCache refresh cadence (1 = off): full UNet '
+                         'pass every k ticks, shallow passes in between')
+    ap.add_argument('--exit-tol', type=float, default=None,
+                    help='early-exit tolerance on the relative x0 delta '
+                         '(None/0 = off)')
+    ap.add_argument('--exit-patience', type=int, default=2,
+                    help='consecutive converged ticks before draining')
     args = ap.parse_args()
     precision = 'fp32' if args.fp32 else args.precision
 
@@ -83,7 +98,10 @@ def main():
     # quality probe off for the throughput race; see --help of
     # repro.launch.serve for the probed frontier report
     engine = ContinuousBatchingEngine(pipe, slots=args.slots,
-                                      quality_probe=0)
+                                      quality_probe=0,
+                                      cache_interval=args.cache_interval,
+                                      exit_tol=args.exit_tol,
+                                      exit_patience=args.exit_patience)
     print('[engine] warmup (compile)...', flush=True)
     engine.warmup(precisions=(precision,))
     # arrivals spread over one baseline service window: batch-at-once can
@@ -109,6 +127,10 @@ def main():
           f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms)')
     print(f'[engine]   speedup vs batch-at-once: '
           f'{base_makespan / makespan:.2f}x')
+    if args.cache_interval > 1 or s['steps_saved'] > 0:
+        print(f'[sched]    cache_hit_rate={s["cache_hit_rate"]:.2f} '
+              f'early_exits={int(s["early_exits"])} '
+              f'steps_saved={int(s["steps_saved"])}')
     src = 'simulated DiffLight' if precision != 'fp32' \
         else 'GPU digital baseline'
     print(f'[energy]   {s["energy_per_request_mj"]:.2f} mJ/request '

@@ -7,7 +7,9 @@
 #   1. collection must succeed without hypothesis
 #   2. smoke lane (-m smoke): fast signal first
 #   3. quant serving lane (-m quant): the precision-policy fast path
-#   4. full tier-1 suite
+#   4. sched lane (-m "sched and smoke"): the cache-/convergence-aware
+#      scheduler's fast checks (DeepCache-phased slots, early exit)
+#   5. full tier-1 suite
 #
 # CI_SMOKE_ONLY=1 stops after stage 2 (pre-push hook scale).
 set -euo pipefail
@@ -16,10 +18,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/scripts/ci_stubs:$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 
-echo '== [1/4] collection (hypothesis absent) =='
+echo '== [1/5] collection (hypothesis absent) =='
 python -m pytest -q --collect-only >/dev/null
 
-echo '== [2/4] smoke lane =='
+echo '== [2/5] smoke lane =='
 python -m pytest -q -m smoke
 
 if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
@@ -27,8 +29,11 @@ if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
     exit 0
 fi
 
-echo '== [3/4] quant serving lane =='
+echo '== [3/5] quant serving lane =='
 python -m pytest -q -m quant
 
-echo '== [4/4] full tier-1 =='
+echo '== [4/5] sched lane =='
+python -m pytest -q -m "sched and smoke"
+
+echo '== [5/5] full tier-1 =='
 python -m pytest -q

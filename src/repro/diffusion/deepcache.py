@@ -101,18 +101,28 @@ def unet_apply_cached(p, cfg: UNetConfig, x: jax.Array, t: jax.Array,
     return L.conv2d(p['conv_out'], h_up), new_cache
 
 
-def deepcache_workload_factor(cfg: UNetConfig, interval: int = 5) -> float:
-    """Average per-step MAC fraction vs the full UNet (for the simulator's
-    derived DeepCache point): 1 full pass + (interval-1) shallow passes."""
+def shallow_workload_fraction(cfg: UNetConfig) -> float:
+    """MAC fraction of one *skip* (shallow) pass vs one full UNet pass.
+
+    A skip step recomputes only the outermost down level + last up level
+    + in/out convs; we approximate that by the full-resolution share of
+    the MAC count.  This single source feeds both the derived DeepCache
+    simulator point and the serving engine's photonic accountant, which
+    bills skip ticks at this fraction of a full-UNet tick.
+    """
     from repro.core.photonic.workload import unet_workload
     full = unet_workload(cfg).total_macs_dense
-    # shallow pass ~ outermost down level + last up level + in/out convs:
-    # approximate by the full-resolution share of the MAC count
     shallow_cfg = UNetConfig(
         name=cfg.name + '-shallow', img_size=cfg.img_size, in_ch=cfg.in_ch,
         base_ch=cfg.base_ch, ch_mults=cfg.ch_mults[:1],
         n_res_blocks=cfg.n_res_blocks,
         attn_resolutions=cfg.attn_resolutions, n_heads=cfg.n_heads,
         context_dim=cfg.context_dim)
-    shallow = unet_workload(shallow_cfg).total_macs_dense
-    return (full + (interval - 1) * shallow) / (interval * full)
+    return unet_workload(shallow_cfg).total_macs_dense / full
+
+
+def deepcache_workload_factor(cfg: UNetConfig, interval: int = 5) -> float:
+    """Average per-step MAC fraction vs the full UNet (for the simulator's
+    derived DeepCache point): 1 full pass + (interval-1) shallow passes."""
+    s = shallow_workload_fraction(cfg)
+    return (1.0 + (interval - 1) * s) / interval

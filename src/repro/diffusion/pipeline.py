@@ -80,12 +80,20 @@ class DiffusionPipeline:
             policy=dataclasses.replace(pol, calibration='prequant'))
 
     def generate_deepcache(self, key, batch: int, steps: int = 50,
-                           interval: int = 5, context=None) -> jax.Array:
+                           interval: int = 5, context=None,
+                           policy: Optional[PrecisionPolicy] = None
+                           ) -> jax.Array:
         """DDIM sampling with the DeepCache baseline ([21]): a full UNet
         pass every `interval` steps, shallow passes in between (deep
-        features reused).  Python-level step loop (two jitted variants)."""
+        features reused).  Python-level step loop (two jitted variants).
+        With ``interval=1`` every step refreshes, so the output matches
+        ``generate`` exactly.  ``policy`` overrides the pipeline's
+        default precision for this call (the serving engine's cached
+        fast path runs the same ``unet_apply_cached`` under per-request
+        policies)."""
         from repro.diffusion.deepcache import unet_apply_cached
         import jax as _jax
+        pol = resolve(policy) if policy is not None else self.policy
         sched = self.sched
         ts = samplers.ddim_timesteps(sched, steps)
         shape = self.sample_shape(batch)
@@ -93,9 +101,9 @@ class DiffusionPipeline:
         x = jax.random.normal(k0, shape)
         cache = None
         full = _jax.jit(lambda p, xx, tt, ctx: unet_apply_cached(
-            p, self.unet_cfg, xx, tt, None, True, ctx, self.policy))
+            p, self.unet_cfg, xx, tt, None, True, ctx, pol))
         shallow = _jax.jit(lambda p, xx, tt, c, ctx: unet_apply_cached(
-            p, self.unet_cfg, xx, tt, c, False, ctx, self.policy))
+            p, self.unet_cfg, xx, tt, c, False, ctx, pol))
         for i, t in enumerate(ts):
             tb = jnp.full((batch,), int(t), jnp.int32)
             if i % interval == 0 or cache is None:

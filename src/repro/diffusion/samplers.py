@@ -58,13 +58,19 @@ def ddim_timesteps(sched: Schedule, steps: int) -> np.ndarray:
 
 def ddim_step(sched: Schedule, eps: jax.Array, x: jax.Array, t: jax.Array,
               t_prev: jax.Array, eta: float = 0.0,
-              key: Optional[jax.Array] = None) -> jax.Array:
+              key: Optional[jax.Array] = None,
+              return_x0: bool = False) -> jax.Array:
     """One DDIM update x_t -> x_{t_prev}, given the predicted noise `eps`.
 
     Vectorizes over *per-sample* timesteps: `t` / `t_prev` may be scalars or
     (B,) int vectors, so samples at different denoising depths share one
     call (the continuous-batching engine's mixed-timestep step).  A
     `t_prev < 0` entry means "step to x_0" (alpha_bar_prev = 1).
+
+    ``return_x0=True`` additionally returns the clean-image prediction
+    ``x0_pred`` the update is built on — the convergence signal the
+    serving engine's speculative early-exit tracks (``||x0_t - x0_{t-1}||``
+    flat for several ticks means further steps no longer move the image).
     """
     B = x.shape[0]
     bshape = (B,) + (1,) * (x.ndim - 1)
@@ -81,6 +87,8 @@ def ddim_step(sched: Schedule, eps: jax.Array, x: jax.Array, t: jax.Array,
         jnp.sqrt(jnp.maximum(1 - ab_prev - sigma ** 2, 0.0)) * eps
     if key is not None:
         x_prev = x_prev + sigma * jax.random.normal(key, x.shape, x.dtype)
+    if return_x0:
+        return x_prev, x0_pred
     return x_prev
 
 

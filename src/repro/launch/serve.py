@@ -82,10 +82,15 @@ def poisson_trace(n: int, rate_hz: float, steps: int, seed: int = 0,
 
 def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                     slots: int, precision: str = 'fp32', seed: int = 0,
-                    slo_ms=None, quality_probe: int = 1):
+                    slo_ms=None, quality_probe: int = 1,
+                    cache_interval: int = 1, exit_tol=None,
+                    exit_patience: int = 2):
     """Replay a Poisson arrival trace through the continuous-batching
     engine and print the serving + energy report, plus the per-policy
-    accuracy-vs-EPB frontier."""
+    accuracy-vs-EPB frontier.  ``cache_interval > 1`` enables
+    DeepCache-phased slotting (full UNet pass every ``cache_interval``
+    ticks, shallow passes in between); ``exit_tol`` enables speculative
+    early-exit draining once a request's x0 prediction stops moving."""
     from repro.diffusion.pipeline import DiffusionPipeline
     from repro.models.unet import UNetConfig
     from repro.serving import ContinuousBatchingEngine
@@ -95,14 +100,22 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                      attn_resolutions=(img // 2,), n_heads=4, timesteps=100)
     pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
     engine = ContinuousBatchingEngine(pipe, slots=slots,
-                                      quality_probe=quality_probe)
+                                      quality_probe=quality_probe,
+                                      cache_interval=cache_interval,
+                                      exit_tol=exit_tol,
+                                      exit_patience=exit_patience)
     print(f'[serve] warmup (compile, policy={precision})...', flush=True)
     engine.warmup(precisions=(precision,))
     trace = poisson_trace(n_requests, rate_hz, steps, seed, slo_ms=slo_ms,
                           precision=precision)
+    sched = []
+    if cache_interval > 1:
+        sched.append(f'cache_interval={cache_interval}')
+    if exit_tol is not None and exit_tol > 0:
+        sched.append(f'exit_tol={exit_tol:g} patience={exit_patience}')
     print(f'[serve] replaying {n_requests} requests at {rate_hz:.1f} req/s '
-          f'({slots} slots, {steps} DDIM steps, precision={precision})',
-          flush=True)
+          f'({slots} slots, {steps} DDIM steps, precision={precision}'
+          + (', ' + ', '.join(sched) if sched else '') + ')', flush=True)
     t0 = time.perf_counter()
     results = engine.replay(trace)
     makespan = time.perf_counter() - t0
@@ -110,7 +123,11 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     print(f'[serve] {len(results)} done in {makespan:.2f}s '
           f'({s["requests_per_s"]:.2f} req/s) '
           f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms '
-          f'slo_viol={int(s["slo_violations"])}')
+          f'slo_viol={int(s["slo_violations"])} shed={int(s["shed"])}')
+    if cache_interval > 1 or s['steps_saved'] > 0:
+        print(f'[sched] cache_hit_rate={s["cache_hit_rate"]:.2f} '
+              f'early_exits={int(s["early_exits"])} '
+              f'steps_saved={int(s["steps_saved"])}')
     src = 'simulated DiffLight' if precision != 'fp32' \
         else 'GPU digital baseline'
     print(f'[energy] {s["energy_per_request_mj"]:.2f} mJ/request '
@@ -119,8 +136,14 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
         quality = '' if pt['probed'] == 0 else (
             f'  psnr={pt["mean_psnr_db"]:.1f}dB mse={pt["mean_mse"]:.2e}'
             f' (vs fp32 reference, {int(pt["probed"])} probed)')
+        sched_cols = ''
+        if pt['cache_hit_rate'] > 0 or pt['early_exits'] > 0:
+            sched_cols = (f'  hit_rate={pt["cache_hit_rate"]:.2f}'
+                          f' steps={pt["mean_steps_executed"]:.1f}'
+                          f'/{pt["mean_steps_requested"]:.1f}')
         print(f'[frontier] {name}: {pt["mean_epb_pj"]:.3f} pJ/bit  '
-              f'{pt["mean_energy_j"] * 1e3:.2f} mJ/request{quality}')
+              f'{pt["mean_energy_j"] * 1e3:.2f} mJ/request'
+              f'{sched_cols}{quality}')
     return results
 
 
@@ -151,12 +174,25 @@ def main():
                     help='DDIM steps per request (diffusion mode)')
     ap.add_argument('--img', type=int, default=16)
     ap.add_argument('--slo-ms', type=float, default=None)
+    ap.add_argument('--cache-interval', type=int, default=1,
+                    help='DeepCache refresh cadence: full UNet pass every '
+                         'k ticks, shallow cached passes in between '
+                         '(1 = caching off)')
+    ap.add_argument('--exit-tol', type=float, default=None,
+                    help='speculative early exit: drain a request once its '
+                         'x0 prediction moves less than this relative '
+                         'tolerance (None/0 = off)')
+    ap.add_argument('--exit-patience', type=int, default=2,
+                    help='consecutive converged ticks before early exit')
     args = ap.parse_args()
     if args.diffusion:
         precision = args.precision or ('w8a8' if args.w8a8 else 'fp32')
         serve_diffusion(args.img, args.steps, args.requests, args.rate,
                         args.slots, precision=precision, slo_ms=args.slo_ms,
-                        quality_probe=args.quality_probe)
+                        quality_probe=args.quality_probe,
+                        cache_interval=args.cache_interval,
+                        exit_tol=args.exit_tol,
+                        exit_patience=args.exit_patience)
         return
     cfg = smoke_config(args.arch) if args.preset == 'smoke' \
         else get(args.arch)

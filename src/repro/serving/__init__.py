@@ -22,7 +22,8 @@ baseline — together they form the frontier in every metrics snapshot.
 from repro.core.precision import PrecisionPolicy
 from repro.serving.api import GenerationRequest, GenerationResult
 from repro.serving.batcher import (Bucket, BucketRouter, bucket_for,
-                                   choose_slots, group_by_precision)
+                                   choose_slots, group_by_precision,
+                                   split_cache_phase)
 from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.metrics import (FrontierPoint, PhotonicAccountant,
                                    ServingMetrics)
@@ -33,5 +34,5 @@ __all__ = [
     'AdmissionQueue', 'ServingMetrics', 'PhotonicAccountant',
     'PrecisionPolicy', 'FrontierPoint',
     'Bucket', 'BucketRouter', 'bucket_for', 'choose_slots',
-    'group_by_precision',
+    'group_by_precision', 'split_cache_phase',
 ]

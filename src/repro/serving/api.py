@@ -34,6 +34,20 @@ class GenerationRequest:
     metrics, never enforced by dropping work.  ``precision``: one of
     ``'fp32' | 'w8a8' | 'w8a8+noise'`` — the execution policy for this
     request's UNet evaluations.
+
+    Scheduler knobs (None = inherit the engine's defaults):
+
+    ``cache_interval`` — DeepCache participation.  ``1`` opts this
+    request out of feature caching (every tick is a full UNet pass);
+    any value ``> 1`` opts in to the *engine's* shared refresh cadence
+    (phase alignment means the engine interval governs the actual
+    schedule, the per-request value only gates participation).
+
+    ``exit_tol`` / ``exit_patience`` — speculative early exit: drain the
+    request once the relative change of its x0 prediction,
+    ``||x0_t - x0_{t-1}|| / ||x0_{t-1}||``, stays below ``exit_tol`` for
+    ``exit_patience`` consecutive ticks.  ``exit_tol <= 0`` disables
+    early exit for this request.
     """
     request_id: int
     seed: int
@@ -43,6 +57,9 @@ class GenerationRequest:
     arrival_time: float = 0.0
     slo_ms: Optional[float] = None
     precision: str = 'fp32'
+    cache_interval: Optional[int] = None
+    exit_tol: Optional[float] = None
+    exit_patience: Optional[int] = None
 
     def __post_init__(self):
         if self.steps < 1:
@@ -51,6 +68,12 @@ class GenerationRequest:
             raise ValueError(
                 f'request {self.request_id}: unknown precision '
                 f'{self.precision!r} (expected one of {PRECISION_NAMES})')
+        if self.cache_interval is not None and self.cache_interval < 1:
+            raise ValueError(f'request {self.request_id}: cache_interval '
+                             'must be >= 1 when given')
+        if self.exit_patience is not None and self.exit_patience < 1:
+            raise ValueError(f'request {self.request_id}: exit_patience '
+                             'must be >= 1 when given')
 
 
 @dataclasses.dataclass
@@ -59,9 +82,16 @@ class GenerationResult:
 
     ``policy`` is the resolved ``PrecisionPolicy`` the engine executed
     this request under.  ``quality_psnr_db`` / ``quality_mse`` compare
-    the served output against the fp32 reference for the same
-    seed/steps/guidance — populated for quality-probed quantized
-    requests, ``None`` otherwise (fp32 requests ARE the reference).
+    the served output against the full-step fp32 reference for the same
+    seed/steps/guidance — populated for quality-probed quantized,
+    cached, or early-exited requests, ``None`` otherwise (full-step
+    fp32 requests ARE the reference).
+
+    Step accounting: ``steps`` is what the request *asked* for;
+    ``steps_executed`` is how many denoise ticks actually ran (fewer
+    when speculative early exit drained the slot), split into
+    ``full_evals`` full-UNet passes and ``cached_evals`` shallow
+    DeepCache passes.  ``early_exit`` marks a convergence drain.
     """
     request_id: int
     image: np.ndarray
@@ -75,6 +105,17 @@ class GenerationResult:
     policy: Optional[PrecisionPolicy] = None
     quality_psnr_db: Optional[float] = None
     quality_mse: Optional[float] = None
+    steps_executed: Optional[int] = None   # None = all requested steps ran
+    full_evals: int = 0            # full-UNet denoise ticks consumed
+    cached_evals: int = 0          # shallow (DeepCache skip) ticks consumed
+    early_exit: bool = False       # drained by x0-convergence early exit
+
+    @property
+    def steps_saved(self) -> int:
+        """Requested-minus-executed steps (0 when the full trajectory ran)."""
+        if self.steps_executed is None:
+            return 0
+        return self.steps - self.steps_executed
 
     @property
     def queue_delay_s(self) -> float:

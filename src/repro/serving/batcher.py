@@ -55,6 +55,25 @@ def group_by_precision(
     return groups
 
 
+def split_cache_phase(mask: np.ndarray,
+                      needs_refresh: np.ndarray
+                      ) -> 'tuple[np.ndarray, np.ndarray]':
+    """Split one precision group's slot mask into (refresh, skip) masks.
+
+    ``needs_refresh[i]`` is True when slot i must run the full UNet pass
+    this tick: the shared refresh cadence hit phase 0, the slot opted out
+    of caching, or it has no cache yet (first step after admission).
+    Phase-aligned admission (new requests snap onto the shared refresh
+    cadence) makes every cache-enabled slot agree on this flag, so a tick
+    is a whole-batch full pass or a whole-batch shallow pass — the skip
+    masks returned here only mix with refresh masks when some requests
+    opted out of caching (``ServingMetrics.mixed_ticks`` counts those).
+    """
+    mask = np.asarray(mask, bool)
+    needs_refresh = np.asarray(needs_refresh, bool)
+    return mask & needs_refresh, mask & ~needs_refresh
+
+
 def _per_precision(value, key):
     return value[key] if isinstance(value, Mapping) else value
 

@@ -26,9 +26,32 @@ step per (policy, guided) pair.  Per tick:
      seed/steps/guidance and report PSNR/MSE against it — the per-request
      points of the accuracy-vs-EPB frontier.
 
+Two cooperating schedulers make the per-tick step cost *dynamic*:
+
+  * **DeepCache-phased slots** (``cache_interval > 1``): the engine owns
+    a batched slot-axis feature-cache buffer ``(slots, ...)`` and keeps
+    exactly TWO pre-compiled step variants per (policy, guided) pair —
+    a *refresh* step (full UNet pass, rewrites the cache rows) and a
+    *skip* step (shallow pass splicing in the cached deep features).
+    All cache-enabled slots share one refresh cadence: admission snaps
+    new requests onto phase 0 of the cadence (a queued request is held
+    until the next refresh tick), so every skip tick is a whole-batch
+    shallow pass.  The photonic accountant bills skip ticks through the
+    DeepCache workload transform (``shallow_workload_fraction``) instead
+    of a full-UNet tick.
+  * **Speculative early-exit draining** (``exit_tol``): every step also
+    surfaces the x0 prediction from ``samplers.ddim_step``; the engine
+    tracks the per-slot relative change ``||x0_t - x0_{t-1}||`` and
+    drains a slot whose prediction stayed within ``exit_tol`` for
+    ``exit_patience`` consecutive ticks, committing the converged x0 as
+    the result — per-request step counts become dynamic and the freed
+    slot is immediately available to queued work.
+
 Every device function is jitted once against fixed shapes — after one
 warmup per policy (``warmup(precisions=...)``) the engine performs ZERO
-recompilations, which ``compile_stats()`` exposes for tests to assert.
+recompilations, which ``compile_stats()`` exposes for tests to assert;
+enabling caching adds exactly the refresh/skip pair per (policy,
+guided), never more.
 
 Output equivalence: with eta=0 DDIM is deterministic given the initial
 noise, and both the UNet and the per-row w8a8 activation scales treat
@@ -52,22 +75,30 @@ import numpy as np
 
 from repro.core.precision import PrecisionPolicy
 from repro.diffusion import samplers
+from repro.diffusion.deepcache import unet_apply_cached
 from repro.diffusion.pipeline import DiffusionPipeline
 from repro.models import autoencoder as AE
 from repro.serving.api import GenerationRequest, GenerationResult
-from repro.serving.batcher import group_by_precision
+from repro.serving.batcher import group_by_precision, split_cache_phase
 from repro.serving.metrics import PhotonicAccountant, ServingMetrics
 from repro.serving.queue import AdmissionQueue, Queued
 
 
 @dataclasses.dataclass
 class _Active:
-    """One occupied slot: the request plus its trajectory cursor."""
+    """One occupied slot: the request plus its trajectory cursor and the
+    scheduler state (resolved cache/early-exit knobs, eval counters)."""
     request: GenerationRequest
     ts: np.ndarray               # this request's DDIM timestep trajectory
     i: int                       # next step index into `ts`
     submit_time: float
     start_time: float
+    cache_on: bool = False       # participates in the shared refresh cadence
+    exit_tol: float = 0.0        # <= 0: early exit disabled
+    exit_patience: int = 2
+    full_evals: int = 0          # full-UNet ticks consumed so far
+    cached_evals: int = 0        # shallow (skip) ticks consumed so far
+    exit_streak: int = 0         # consecutive ticks under exit_tol
 
 
 class ContinuousBatchingEngine:
@@ -77,36 +108,82 @@ class ContinuousBatchingEngine:
                  photonic: Optional[PhotonicAccountant] = None,
                  track_energy: bool = True,
                  noise_model=None, noise_seed: int = 0,
-                 quality_probe: int = 1):
+                 quality_probe: int = 1,
+                 cache_interval: int = 1,
+                 exit_tol: Optional[float] = None,
+                 exit_patience: int = 2,
+                 exit_min_steps: int = 2):
         """``noise_model`` / ``noise_seed`` configure the ``w8a8+noise``
         policy (defaults: the paper's analog perturbation model, seed 0).
-        ``quality_probe``: run the fp32 reference + PSNR/MSE probe for
-        every k-th completed quantized request (0 disables probing)."""
+        ``quality_probe``: run the full-step fp32 reference + PSNR/MSE
+        probe for every k-th completed quantized / cached / early-exited
+        request (0 disables probing).
+
+        ``cache_interval``: the shared DeepCache refresh cadence — a full
+        UNet pass every ``cache_interval`` ticks, shallow passes in
+        between (1 = caching off).  ``exit_tol`` / ``exit_patience``:
+        engine-wide speculative early-exit defaults (requests override
+        per field; ``exit_tol=None`` leaves early exit off).
+        ``exit_min_steps``: never early-exit before this many executed
+        steps (at least 2 — the convergence signal needs two x0
+        predictions)."""
         if slots < 1:
             raise ValueError('need at least one slot')
+        if cache_interval < 1:
+            raise ValueError('cache_interval must be >= 1')
         self.pipe = pipe
         self.slots = slots
         self.context = context
-        self.queue = queue or AdmissionQueue()
-        self.metrics = metrics or ServingMetrics()
+        # `is not None`, not truthiness: an empty AdmissionQueue is falsy
+        # (len() == 0), and `or` would silently drop its depth bound
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.metrics = metrics if metrics is not None else ServingMetrics()
         self.photonic = photonic or (
             PhotonicAccountant(pipe.unet_cfg) if track_energy else None)
         self.noise_model = noise_model
         self.noise_seed = noise_seed
         self.quality_probe = quality_probe
+        self.cache_interval = cache_interval
+        self.exit_tol = exit_tol
+        self.exit_patience = exit_patience
+        self.exit_min_steps = max(2, exit_min_steps)
         cfg = pipe.unet_cfg
         self._sample_shape = (cfg.img_size, cfg.img_size, cfg.in_ch)
         self.x = jnp.zeros((slots,) + self._sample_shape, jnp.float32)
+        # previous-tick x0 predictions (the early-exit convergence signal)
+        self.x0 = jnp.zeros_like(self.x)
         self._slot: List[Optional[_Active]] = [None] * slots
         self._traj: Dict[int, np.ndarray] = {}
         self._wall_t0 = 0.0          # wall-clock origin (set by replay)
-        self._quant_done = 0         # completed quantized requests (probe)
+        self._probe_done = 0         # completed probe-eligible requests
+        self._phase = 0              # shared refresh cadence position
         # precision machinery: policies and jitted steps are built lazily,
-        # one step per (precision, guided) pair, each closing over its
-        # frozen PrecisionPolicy — new policies never disturb compiled ones
+        # one step per (precision, guided) pair — plus, with caching on,
+        # exactly one (refresh, skip) pair per (precision, guided) — each
+        # closing over its frozen PrecisionPolicy; new policies never
+        # disturb compiled ones
         self._policies: Dict[str, PrecisionPolicy] = {}
         self._steps: Dict[Tuple[str, bool], 'jax.stages.Wrapped'] = {}
+        self._csteps: Dict[Tuple[str, bool, bool], 'jax.stages.Wrapped'] = {}
         self._zero_key = jax.random.PRNGKey(0)     # inert key, fp32/w8a8
+
+        # slot-axis DeepCache buffers: the activation entering the last up
+        # level, one row per slot (shape discovered by abstract evaluation
+        # of the refresh pass — policies don't change it)
+        self._cache_c = self._cache_u = None
+        if self.cache_interval > 1:
+            cache_s = jax.eval_shape(
+                lambda xx, tt: unet_apply_cached(
+                    pipe.unet_params, cfg, xx, tt, None, True,
+                    self.context, PrecisionPolicy.fp32()),
+                jax.ShapeDtypeStruct((slots,) + self._sample_shape,
+                                     jnp.float32),
+                jax.ShapeDtypeStruct((slots,), jnp.int32))[1]
+            self._cache_c = jnp.zeros(cache_s.shape, cache_s.dtype)
+            if self.context is not None:
+                # classifier-free guidance caches the unconditional
+                # branch's deep features separately
+                self._cache_u = jnp.zeros(cache_s.shape, cache_s.dtype)
 
         # initial noise exactly as ddim_sample: x = normal(split(key)[0], .)
         self._init_noise = jax.jit(lambda key: jax.random.normal(
@@ -135,10 +212,28 @@ class ContinuousBatchingEngine:
             self._policies[name] = pol
         return self._policies[name]
 
+    @staticmethod
+    def _finish_step(sched, eps, x, x0p, t, t_prev, active):
+        """Shared tail of every step variant: DDIM update + x0 tracking.
+
+        Returns (x_out, x0_out, delta) where ``delta`` is the per-slot
+        relative x0 movement ``||x0_t - x0_{t-1}|| / ||x0_{t-1}||``
+        (RMS over sample dims; 0 for inactive slots) — the speculative
+        early-exit convergence signal."""
+        x_new, x0_new = samplers.ddim_step(sched, eps, x, t, t_prev,
+                                           return_x0=True)
+        axes = tuple(range(1, x.ndim))
+        num = jnp.sqrt(jnp.mean((x0_new - x0p) ** 2, axis=axes))
+        den = jnp.sqrt(jnp.mean(x0p ** 2, axis=axes)) + 1e-8
+        delta = jnp.where(active, num / den, 0.0)
+        mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (jnp.where(mask, x_new, x), jnp.where(mask, x0_new, x0p),
+                delta)
+
     def _make_step(self, pol: PrecisionPolicy, use_guidance: bool):
         pipe, sched = self.pipe, self.pipe.sched
 
-        def step(x, t, t_prev, active, guidance, key):
+        def step(x, x0p, t, t_prev, active, guidance, key):
             nkey = key if pol.noisy else None
             if use_guidance:
                 # per-slot classifier-free guidance: blend against the
@@ -151,12 +246,52 @@ class ContinuousBatchingEngine:
                                      noise_key=ukey)(x, t)
                 g = guidance.reshape((-1,) + (1,) * (x.ndim - 1))
                 eps = jnp.where(g > 0, eps_u + g * (eps_c - eps_u), eps_c)
-                x_new = samplers.ddim_step(sched, eps, x, t, t_prev)
             else:
-                x_new = pipe.denoise_step(x, t, t_prev, context=self.context,
-                                          policy=pol, noise_key=nkey)
-            mask = active.reshape((-1,) + (1,) * (x.ndim - 1))
-            return jnp.where(mask, x_new, x)
+                eps = pipe._eps_fn(self.context, 0.0, policy=pol,
+                                   noise_key=nkey)(x, t)
+            return self._finish_step(sched, eps, x, x0p, t, t_prev, active)
+        return step
+
+    def _make_cached_step(self, pol: PrecisionPolicy, use_guidance: bool,
+                          refresh: bool):
+        """DeepCache-phased step: ``refresh`` is STATIC (two jitted
+        variants per (policy, guided) pair, matching the interval
+        schedule).  The refresh variant rewrites the cache rows of the
+        slots it ran; the skip variant reuses them via the shallow pass
+        and leaves the buffers untouched."""
+        pipe, sched, cfg = self.pipe, self.pipe.sched, self.pipe.unet_cfg
+        params = pipe.unet_params
+
+        def eval_cached(x, t, cache, context, nkey):
+            return unet_apply_cached(params, cfg, x, t, cache, refresh,
+                                     context, pol, noise_key=nkey)
+
+        if use_guidance:
+            def step(x, x0p, cache_c, cache_u, t, t_prev, active,
+                     guidance, key):
+                nkey = key if pol.noisy else None
+                ukey = jax.random.fold_in(key, 1) if pol.noisy else None
+                eps_c, new_c = eval_cached(x, t, cache_c, self.context, nkey)
+                eps_u, new_u = eval_cached(x, t, cache_u, None, ukey)
+                g = guidance.reshape((-1,) + (1,) * (x.ndim - 1))
+                eps = jnp.where(g > 0, eps_u + g * (eps_c - eps_u), eps_c)
+                x_out, x0_out, delta = self._finish_step(
+                    sched, eps, x, x0p, t, t_prev, active)
+                if refresh:
+                    cm = active.reshape((-1,) + (1,) * (new_c.ndim - 1))
+                    cache_c = jnp.where(cm, new_c, cache_c)
+                    cache_u = jnp.where(cm, new_u, cache_u)
+                return x_out, x0_out, delta, cache_c, cache_u
+        else:
+            def step(x, x0p, cache_c, t, t_prev, active, guidance, key):
+                nkey = key if pol.noisy else None
+                eps, new_c = eval_cached(x, t, cache_c, self.context, nkey)
+                x_out, x0_out, delta = self._finish_step(
+                    sched, eps, x, x0p, t, t_prev, active)
+                if refresh:
+                    cm = active.reshape((-1,) + (1,) * (new_c.ndim - 1))
+                    cache_c = jnp.where(cm, new_c, cache_c)
+                return x_out, x0_out, delta, cache_c
         return step
 
     def _get_step(self, precision: str, guided: bool):
@@ -164,8 +299,18 @@ class ContinuousBatchingEngine:
         if k not in self._steps:
             pol = self._policy_for(precision)
             self._steps[k] = jax.jit(self._make_step(pol, guided),
-                                     donate_argnums=(0,))
+                                     donate_argnums=(0, 1))
         return self._steps[k]
+
+    def _get_cached_step(self, precision: str, guided: bool, refresh: bool):
+        k = (precision, guided, refresh)
+        if k not in self._csteps:
+            pol = self._policy_for(precision)
+            donate = (0, 1, 2, 3) if guided else (0, 1, 2)
+            self._csteps[k] = jax.jit(
+                self._make_cached_step(pol, guided, refresh),
+                donate_argnums=donate)
+        return self._csteps[k]
 
     def _tick_key(self, pol: PrecisionPolicy, tick_idx: int):
         """Per-tick analog-noise key: the policy's seed anchor folded with
@@ -189,24 +334,31 @@ class ContinuousBatchingEngine:
         """Per-jitted-function compile counts (cache sizes).  Constant
         after one warmup per served policy == zero recompilation.  Step
         entries are labeled ``_step`` / ``_step_guided`` for fp32 and
-        ``_step[w8a8]``-style for quantized policies."""
+        ``_step[w8a8]``-style for quantized policies; the DeepCache pair
+        appears as ``_step_refresh`` / ``_step_skip`` variants."""
         out = {}
         for (pname, guided), fn in self._steps.items():
             label = ('_step_guided' if guided else '_step') + (
                 '' if pname == 'fp32' else f'[{pname}]')
-            try:
-                out[label] = int(fn._cache_size())
-            except Exception:                      # pragma: no cover
-                out[label] = -1
+            out[label] = self._cache_size(fn)
+        for (pname, guided, refresh), fn in self._csteps.items():
+            label = ('_step_refresh' if refresh else '_step_skip') + (
+                '_guided' if guided else '') + (
+                '' if pname == 'fp32' else f'[{pname}]')
+            out[label] = self._cache_size(fn)
         for name in ('_init_noise', '_place', '_take', '_decode'):
             fn = getattr(self, name)
             if fn is None:
                 continue
-            try:
-                out[name] = int(fn._cache_size())
-            except Exception:                      # pragma: no cover
-                out[name] = -1
+            out[name] = self._cache_size(fn)
         return out
+
+    @staticmethod
+    def _cache_size(fn) -> int:
+        try:
+            return int(fn._cache_size())
+        except Exception:                          # pragma: no cover
+            return -1
 
     # -- request flow ------------------------------------------------------
     def submit(self, req: GenerationRequest,
@@ -215,6 +367,8 @@ class ContinuousBatchingEngine:
         ok = self.queue.submit(req, now)
         if ok:
             self.metrics.record_submit(now)
+        else:
+            self.metrics.record_shed()      # queue bound: load was shed
         return ok
 
     def _trajectory(self, steps: int) -> np.ndarray:
@@ -223,7 +377,20 @@ class ContinuousBatchingEngine:
                 self.pipe.sched, steps)
         return self._traj[steps]
 
+    def _cached_active(self) -> int:
+        return sum(a is not None and a.cache_on for a in self._slot)
+
     def _admit(self, now: float) -> None:
+        if self.cache_interval > 1:
+            if self._cached_active() == 0:
+                # nothing riding the cadence: re-anchor it so admission
+                # is never delayed on an idle engine
+                self._phase = 0
+            if self._phase != 0 and self.queue.peek() is not None:
+                # phase-aligned admission: hold queued requests until the
+                # next refresh tick so every skip tick stays a whole-batch
+                # shallow pass (the phase-alignment invariant)
+                return
         for idx in range(self.slots):
             if self._slot[idx] is not None:
                 continue
@@ -231,11 +398,22 @@ class ContinuousBatchingEngine:
             if q is None:
                 return
             req = q.request
+            interval = self.cache_interval if req.cache_interval is None \
+                else req.cache_interval
+            tol = self.exit_tol if req.exit_tol is None else req.exit_tol
+            patience = self.exit_patience if req.exit_patience is None \
+                else req.exit_patience
             self._slot[idx] = _Active(
                 request=req, ts=self._trajectory(req.steps), i=0,
-                submit_time=q.enqueue_time, start_time=now)
+                submit_time=q.enqueue_time, start_time=now,
+                cache_on=self.cache_interval > 1 and interval > 1,
+                exit_tol=0.0 if tol is None else float(tol),
+                exit_patience=patience)
             noise = self._init_noise(jax.random.PRNGKey(req.seed))
             self.x = self._place(self.x, jnp.int32(idx), noise)
+            # seed the x0 tracker with the slot's noise: the first delta
+            # is meaningless and ignored (exit_min_steps >= 2)
+            self.x0 = self._place(self.x0, jnp.int32(idx), noise)
 
     def _fp32_reference(self, req: GenerationRequest,
                         guided: bool) -> np.ndarray:
@@ -260,9 +438,12 @@ class ContinuousBatchingEngine:
         return mse, psnr
 
     def _drain(self, idx: int, now: float,
-               wall_clock: bool = False) -> GenerationResult:
+               wall_clock: bool = False,
+               early: bool = False) -> GenerationResult:
         a = self._slot[idx]
-        z = self._take(self.x, jnp.int32(idx))[None]
+        # an early-exit drain commits the CONVERGED x0 prediction — the
+        # speculative clean image — instead of the partially-denoised x
+        z = self._take(self.x0 if early else self.x, jnp.int32(idx))[None]
         if self._decode is not None:
             z = self._decode(z)
         req = a.request
@@ -270,35 +451,46 @@ class ContinuousBatchingEngine:
         guided = req.guidance > 0.0 and self.context is not None
         energy_j = epb = 0.0
         if self.photonic is not None:
-            energy_j, epb = self.photonic.energy(req.steps, guided,
-                                                 precision=req.precision)
+            # skip ticks are billed through the DeepCache workload
+            # transform (shallow fraction of a full-UNet tick); early
+            # exit pays only for the ticks that actually ran
+            energy_j, epb = self.photonic.energy_evals(
+                a.full_evals, a.cached_evals, guided,
+                precision=req.precision)
         image = np.asarray(z[0])           # device sync: image materialized
         if wall_clock:
             # only now has the final step + decode actually executed
             now = time.perf_counter() - self._wall_t0
         # quality probe AFTER the latency stamp: the eager fp32 reference
-        # is measurement apparatus, not served work
+        # is measurement apparatus, not served work.  Cached or
+        # early-exited requests are probe-eligible at ANY precision —
+        # their PSNR vs the full-step fp32 reference is the equal-quality
+        # axis of the throughput frontier.
         mse = psnr = None
-        if pol.quantized and self.quality_probe > 0:
-            if self._quant_done % self.quality_probe == 0:
+        reduced = early or a.cached_evals > 0
+        if (pol.quantized or reduced) and self.quality_probe > 0:
+            if self._probe_done % self.quality_probe == 0:
                 mse, psnr = self._quality(
                     image, self._fp32_reference(req, guided))
-            self._quant_done += 1
+            self._probe_done += 1
         res = GenerationResult(
             request_id=req.request_id, image=image,
             steps=req.steps, submit_time=a.submit_time,
             start_time=a.start_time, finish_time=now,
             energy_j=energy_j, epb_pj=epb,
             precision=req.precision, policy=pol,
-            quality_psnr_db=psnr, quality_mse=mse)
+            quality_psnr_db=psnr, quality_mse=mse,
+            steps_executed=a.i, full_evals=a.full_evals,
+            cached_evals=a.cached_evals, early_exit=early)
         self.metrics.record_complete(res, slo_ms=req.slo_ms)
         self._slot[idx] = None
         return res
 
     def tick(self, now: Optional[float] = None,
              wall_clock: Optional[bool] = None) -> List[GenerationResult]:
-        """Admit -> one mixed-timestep UNet step per precision group ->
-        drain finished slots.
+        """Admit (phase-aligned when caching) -> one mixed-timestep UNet
+        step per (precision group, refresh|skip) pair -> drain finished
+        and converged slots.
 
         ``wall_clock`` (default: `now` not given) makes drained results
         re-stamp their finish time after the device sync, so reported
@@ -308,39 +500,98 @@ class ContinuousBatchingEngine:
         self._admit(now)
         if self.active_count == 0:
             return []
+        caching = self.cache_interval > 1
+        refresh_tick = self._phase == 0
         t = np.zeros(self.slots, np.int32)
         t_prev = np.full(self.slots, -1, np.int32)
         guidance = np.zeros(self.slots, np.float32)
+        needs_refresh = np.ones(self.slots, bool)
+        track_exit = False
         for idx, a in enumerate(self._slot):
             if a is None:
                 continue
             t[idx] = a.ts[a.i]
             t_prev[idx] = a.ts[a.i + 1] if a.i + 1 < len(a.ts) else -1
             guidance[idx] = a.request.guidance
+            needs_refresh[idx] = (not a.cache_on) or a.i == 0 or refresh_tick
+            if a.exit_tol > 0.0 and a.i + 1 >= self.exit_min_steps:
+                track_exit = True
         groups = group_by_precision(
             [a.request.precision if a is not None else None
              for a in self._slot])
         tick_idx = self.metrics.ticks
+        active_mask = np.zeros(self.slots, bool)
+        for m in groups.values():
+            active_mask |= m
         self.metrics.record_tick(
-            int(sum(m.sum() for m in groups.values())))
-        # one pre-compiled masked step per precision group; donated latent
-        # buffers chain group to group, so slots outside the running group
-        # pass through each call untouched
+            int(active_mask.sum()),
+            full_slots=int((active_mask & needs_refresh).sum()),
+            cached_slots=int((active_mask & ~needs_refresh).sum()))
+        had_cached = self._cached_active() > 0
+        # one pre-compiled masked step per (precision group, refresh|skip)
+        # submask; donated latent/x0/cache buffers chain call to call, so
+        # slots outside the running submask pass through untouched
+        delta_parts = []
+        t_d, tp_d = jnp.asarray(t), jnp.asarray(t_prev)
         for pname in sorted(groups):
             mask = groups[pname]
-            g = np.where(mask, guidance, 0.0).astype(np.float32)
-            guided = self.context is not None and bool(g.any())
-            step_fn = self._get_step(pname, guided)
-            key = self._tick_key(self._policy_for(pname), tick_idx)
-            self.x = step_fn(self.x, jnp.asarray(t), jnp.asarray(t_prev),
-                             jnp.asarray(mask), jnp.asarray(g), key)
+            if caching:
+                r_m, s_m = split_cache_phase(mask, needs_refresh)
+                pairs = ((True, r_m), (False, s_m))
+            else:
+                pairs = ((True, mask),)
+            for kind, m in pairs:
+                if not m.any():
+                    continue
+                g = np.where(m, guidance, 0.0).astype(np.float32)
+                guided = self.context is not None and bool(g.any())
+                key = self._tick_key(self._policy_for(pname), tick_idx)
+                m_d, g_d = jnp.asarray(m), jnp.asarray(g)
+                if caching:
+                    step_fn = self._get_cached_step(pname, guided,
+                                                    refresh=kind)
+                    if guided:
+                        (self.x, self.x0, d, self._cache_c,
+                         self._cache_u) = step_fn(
+                            self.x, self.x0, self._cache_c, self._cache_u,
+                            t_d, tp_d, m_d, g_d, key)
+                    else:
+                        self.x, self.x0, d, self._cache_c = step_fn(
+                            self.x, self.x0, self._cache_c,
+                            t_d, tp_d, m_d, g_d, key)
+                else:
+                    step_fn = self._get_step(pname, guided)
+                    self.x, self.x0, d = step_fn(
+                        self.x, self.x0, t_d, tp_d, m_d, g_d, key)
+                delta_parts.append((m, d))
+        # x0-convergence deltas: materialized (one tiny device sync) only
+        # when some active slot is actually early-exit eligible this tick
+        deltas = np.zeros(self.slots, np.float32)
+        if track_exit:
+            for m, d in delta_parts:
+                dn = np.asarray(d)
+                deltas[m] = dn[m]
         done: List[GenerationResult] = []
         for idx, a in enumerate(self._slot):
             if a is None:
                 continue
+            if needs_refresh[idx]:
+                a.full_evals += 1
+            else:
+                a.cached_evals += 1
             a.i += 1
             if a.i >= len(a.ts):
                 done.append(self._drain(idx, now, wall_clock=wall_clock))
+            elif a.exit_tol > 0.0 and a.i >= self.exit_min_steps:
+                if deltas[idx] < a.exit_tol:
+                    a.exit_streak += 1
+                else:
+                    a.exit_streak = 0
+                if a.exit_streak >= a.exit_patience:
+                    done.append(self._drain(idx, now, wall_clock=wall_clock,
+                                            early=True))
+        if caching and had_cached:
+            self._phase = (self._phase + 1) % self.cache_interval
         return done
 
     def run_until_idle(self, now: Optional[float] = None,
@@ -382,26 +633,32 @@ class ContinuousBatchingEngine:
         raise RuntimeError('replay exceeded max_ticks')
 
     def warmup(self, precisions=('fp32',)) -> None:
-        """Compile every code path (per-policy steps, place, take, decode)
-        with throwaway requests so serving ticks never pay compile time.
+        """Compile every code path (per-policy steps, place, take, decode
+        — and, with caching on, the refresh AND skip variants) with
+        throwaway requests so serving ticks never pay compile time.
         Pass every precision the engine will serve — e.g.
         ``warmup(('fp32', 'w8a8', 'w8a8+noise'))`` — one step compile per
-        (policy, guided) pair, zero recompiles after."""
+        (policy, guided) pair (times the refresh/skip pair when caching),
+        zero recompiles after."""
         saved_q, saved_m = self.queue, self.metrics
         saved_probe = self.quality_probe
         self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
         self.quality_probe = 0          # no fp32 references for throwaways
+        # enough steps to cross a refresh boundary: compiles refresh+skip
+        steps = 1 if self.cache_interval <= 1 else self.cache_interval + 1
         try:
             for i, pname in enumerate(precisions):
                 self.submit(GenerationRequest(request_id=-(2 * i + 1),
-                                              seed=0, steps=1,
+                                              seed=0, steps=steps,
+                                              exit_tol=0.0,
                                               precision=pname), now=0.0)
                 self.run_until_idle(now=0.0)
                 if self.context is not None:
                     # separately: the guided tick variant
                     self.submit(GenerationRequest(request_id=-(2 * i + 2),
-                                                  seed=0, steps=1,
+                                                  seed=0, steps=steps,
                                                   guidance=7.5,
+                                                  exit_tol=0.0,
                                                   precision=pname), now=0.0)
                     self.run_until_idle(now=0.0)
         finally:

@@ -42,21 +42,45 @@ class PhotonicAccountant:
         from repro.core.photonic.arch import PAPER_OPTIMUM
         from repro.core.photonic.workload import unet_workload
         self.arch_cfg = arch_cfg or PAPER_OPTIMUM
+        self.unet_cfg = unet_cfg
         self._per_step = unet_workload(
             unet_cfg, ctx_len=ctx_len if unet_cfg.context_dim else None)
-        self._cache: Dict[int, 'object'] = {}
+        self._cache: Dict[float, 'object'] = {}
+        self._shallow_frac: Optional[float] = None
+
+    @property
+    def shallow_fraction(self) -> float:
+        """MAC fraction of a DeepCache skip pass vs a full UNet pass —
+        the workload transform a skip tick is billed through."""
+        if self._shallow_frac is None:
+            from repro.diffusion.deepcache import shallow_workload_fraction
+            self._shallow_frac = shallow_workload_fraction(self.unet_cfg)
+        return self._shallow_frac
+
+    def _report_factor(self, factor: float):
+        from repro.core.photonic.simulator import simulate
+        key = round(float(factor), 9)
+        if key not in self._cache:
+            self._cache[key] = simulate(
+                self._per_step.scale(factor), self.arch_cfg,
+                name=f'{self._per_step.name}/x{key:g}')
+        return self._cache[key]
 
     def report(self, steps: int, guided: bool = False):
         """SimReport for one request: `steps` UNet evaluations (2x when
         classifier-free guidance runs the conditional + unconditional
         pass per step)."""
-        from repro.core.photonic.simulator import simulate
-        n_evals = steps * (2 if guided else 1)
-        if n_evals not in self._cache:
-            self._cache[n_evals] = simulate(
-                self._per_step.scale(n_evals), self.arch_cfg,
-                name=f'{self._per_step.name}/x{n_evals}')
-        return self._cache[n_evals]
+        return self._report_factor(steps * (2 if guided else 1))
+
+    def report_evals(self, full_evals: int, cached_evals: int = 0,
+                     guided: bool = False):
+        """SimReport for a DeepCache-phased request: ``full_evals`` full
+        UNet passes plus ``cached_evals`` shallow skip passes, each
+        billed at ``shallow_fraction`` of a full pass (the DeepCache
+        workload transform), doubled under classifier-free guidance."""
+        mult = 2 if guided else 1
+        factor = mult * (full_evals + cached_evals * self.shallow_fraction)
+        return self._report_factor(factor)
 
     def energy(self, steps: int, guided: bool = False,
                precision: str = 'w8a8'):
@@ -67,7 +91,19 @@ class PhotonicAccountant:
         ``fp32`` scales EPB by the GPU digital anchor and energy by
         anchor x 4 (32-bit vs 8-bit operands).
         """
-        rep = self.report(steps, guided)
+        return self._price(self.report(steps, guided), precision)
+
+    def energy_evals(self, full_evals: int, cached_evals: int = 0,
+                     guided: bool = False, precision: str = 'w8a8'):
+        """(energy_j, epb_pj) for a request that consumed ``full_evals``
+        full ticks and ``cached_evals`` DeepCache skip ticks — skip ticks
+        cost ``shallow_fraction`` of a full tick, so per-request energy
+        drops on cached ticks at every precision."""
+        return self._price(self.report_evals(full_evals, cached_evals,
+                                             guided), precision)
+
+    @staticmethod
+    def _price(rep, precision: str):
         if precision == 'fp32':
             return (rep.energy_j * FP32_DIGITAL_EPB_X * FP32_BITS_X,
                     rep.epb_pj * FP32_DIGITAL_EPB_X)
@@ -98,6 +134,16 @@ class MetricsSnapshot:
     requests_per_s: float
     total_energy_j: float
     slo_violations: int
+    shed: int = 0                # admissions rejected by the queue bound
+    # DeepCache / early-exit scheduler counters
+    full_steps: int = 0          # slot-steps run as full UNet passes
+    cached_steps: int = 0        # slot-steps run as shallow (skip) passes
+    cache_hit_rate: float = 0.0  # cached_steps / unet_steps
+    mixed_ticks: int = 0         # ticks paying BOTH a full and a skip pass
+    early_exits: int = 0         # requests drained by x0 convergence
+    steps_saved: int = 0         # total requested-minus-executed steps
+    steps_saved_hist: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
     # accuracy-vs-EPB frontier: per-policy aggregates over completed work
     frontier: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
@@ -111,6 +157,13 @@ class ServingMetrics:
         self.unet_steps = 0
         self.total_energy_j = 0.0
         self.slo_violations = 0
+        self.shed = 0
+        self.full_steps = 0
+        self.cached_steps = 0
+        self.mixed_ticks = 0
+        self.early_exits = 0
+        self.steps_saved = 0
+        self.steps_saved_hist: Dict[int, int] = {}
         self.results: List[GenerationResult] = []
         self.frontier_points: List[FrontierPoint] = []
         self._latencies: List[float] = []       # kept sorted
@@ -124,9 +177,31 @@ class ServingMetrics:
         if self._first_submit is None or now < self._first_submit:
             self._first_submit = now
 
-    def record_tick(self, active_slots: int):
+    def record_shed(self):
+        """One admission rejected by the queue's depth bound."""
+        self.shed += 1
+
+    def record_tick(self, active_slots: int,
+                    full_slots: Optional[int] = None,
+                    cached_slots: int = 0):
+        """``full_slots`` / ``cached_slots`` split the tick's slot-steps
+        into full-UNet and shallow DeepCache passes (default: all full).
+        Under the phase-alignment invariant a tick is whole-batch full OR
+        whole-batch shallow; ticks paying both (only possible when some
+        requests opt out of caching) are tallied as ``mixed_ticks``."""
         self.ticks += 1
         self.unet_steps += active_slots
+        if full_slots is None:
+            full_slots = active_slots
+        self.full_steps += full_slots
+        self.cached_steps += cached_slots
+        if full_slots > 0 and cached_slots > 0:
+            self.mixed_ticks += 1
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of executed slot-steps served by the shallow pass."""
+        return self.cached_steps / max(self.unet_steps, 1)
 
     def record_complete(self, res: GenerationResult,
                         slo_ms: Optional[float] = None):
@@ -138,16 +213,31 @@ class ServingMetrics:
             else max(self._last_finish, res.finish_time)
         if slo_ms is not None and res.latency_s * 1e3 > slo_ms:
             self.slo_violations += 1
+        executed = res.steps if res.steps_executed is None \
+            else res.steps_executed
+        saved = res.steps - executed
+        self.steps_saved += saved
+        self.steps_saved_hist[saved] = self.steps_saved_hist.get(saved, 0) + 1
+        if res.early_exit:
+            self.early_exits += 1
         self.frontier_points.append(FrontierPoint(
             request_id=res.request_id, precision=res.precision,
             epb_pj=res.epb_pj, energy_j=res.energy_j,
             psnr_db=res.quality_psnr_db, mse=res.quality_mse))
         d = self._by_policy.setdefault(res.precision, {
             'completed': 0.0, 'energy_j': 0.0, 'epb_sum': 0.0,
-            'probed': 0.0, 'psnr_sum': 0.0, 'mse_sum': 0.0})
+            'probed': 0.0, 'psnr_sum': 0.0, 'mse_sum': 0.0,
+            'steps_sum': 0.0, 'executed_sum': 0.0, 'saved_sum': 0.0,
+            'full_evals': 0.0, 'cached_evals': 0.0, 'early_exits': 0.0})
         d['completed'] += 1
         d['energy_j'] += res.energy_j
         d['epb_sum'] += res.epb_pj
+        d['steps_sum'] += res.steps
+        d['executed_sum'] += executed
+        d['saved_sum'] += saved
+        d['full_evals'] += res.full_evals
+        d['cached_evals'] += res.cached_evals
+        d['early_exits'] += bool(res.early_exit)
         if res.quality_mse is not None:
             d['probed'] += 1
             d['mse_sum'] += res.quality_mse
@@ -172,16 +262,25 @@ class ServingMetrics:
         return self.completed / max(span, 1e-9)
 
     def frontier(self) -> Dict[str, Dict[str, float]]:
-        """Accuracy-vs-EPB frontier: per-policy means over completed work.
+        """Quality-vs-throughput/energy frontier: per-policy means over
+        completed work.
 
-        {precision: {completed, mean_epb_pj, mean_energy_j,
-                     mean_psnr_db, mean_mse, probed}} — PSNR/MSE means
-        run over quality-probed requests only (NaN when none probed).
+        {precision: {completed, probed, mean_epb_pj, mean_energy_j,
+                     mean_psnr_db, mean_mse, mean_steps_requested,
+                     mean_steps_executed, mean_steps_saved,
+                     cache_hit_rate, early_exits}} — PSNR/MSE means run
+        over quality-probed requests only (NaN when none probed);
+        ``cache_hit_rate`` is the fraction of this policy's executed
+        ticks served by the shallow DeepCache pass, and
+        ``mean_steps_saved`` the per-request step reduction from
+        speculative early exit — together they say what the throughput
+        win cost in steps, at the PSNR the probe reports.
         """
         out = {}
         for name, d in self._by_policy.items():
             n = max(d['completed'], 1.0)
             probed = d['probed']
+            evals = max(d['full_evals'] + d['cached_evals'], 1.0)
             out[name] = {
                 'completed': d['completed'],
                 'probed': probed,
@@ -191,6 +290,11 @@ class ServingMetrics:
                 else float('nan'),
                 'mean_mse': (d['mse_sum'] / probed) if probed
                 else float('nan'),
+                'mean_steps_requested': d['steps_sum'] / n,
+                'mean_steps_executed': d['executed_sum'] / n,
+                'mean_steps_saved': d['saved_sum'] / n,
+                'cache_hit_rate': d['cached_evals'] / evals,
+                'early_exits': d['early_exits'],
             }
         return out
 
@@ -205,6 +309,14 @@ class ServingMetrics:
             requests_per_s=self.requests_per_s(),
             total_energy_j=self.total_energy_j,
             slo_violations=self.slo_violations,
+            shed=self.shed,
+            full_steps=self.full_steps,
+            cached_steps=self.cached_steps,
+            cache_hit_rate=self.cache_hit_rate,
+            mixed_ticks=self.mixed_ticks,
+            early_exits=self.early_exits,
+            steps_saved=self.steps_saved,
+            steps_saved_hist=dict(self.steps_saved_hist),
             frontier=self.frontier())
 
     def summary(self) -> Dict[str, float]:
@@ -218,4 +330,8 @@ class ServingMetrics:
             'energy_per_request_mj': (s.total_energy_j * 1e3 /
                                       max(s.completed, 1)),
             'slo_violations': float(s.slo_violations),
+            'shed': float(s.shed),
+            'cache_hit_rate': s.cache_hit_rate,
+            'early_exits': float(s.early_exits),
+            'steps_saved': float(s.steps_saved),
         }

@@ -49,6 +49,14 @@ class AdmissionQueue:
             return None
         return heapq.heappop(self._heap)[2]
 
+    def peek(self) -> Optional[Queued]:
+        """The entry ``pop`` would return, without removing it — the
+        engine's phase-aligned admission looks ahead without committing
+        (a held request keeps accruing queue delay until a refresh tick)."""
+        if not self._heap:
+            return None
+        return self._heap[0][2]
+
     def oldest_wait(self, now: float) -> float:
         """Age of the oldest queued request (0 when empty)."""
         if not self._heap:
