@@ -21,20 +21,36 @@ unit is the physical/logical unit string):
                 DeepCache-phased + early-exit engine (requests/s speedup,
                 PSNR vs the full-step fp32 reference, per-request energy
                 with skip ticks billed at the shallow workload fraction)
+  * coldstart — time-to-first-tick across REAL process restarts: a cold
+                subprocess (empty persistent compilation cache) vs a warm
+                one (same cache dir, second run) — the restart recompile
+                storm vs the cache load
+  * overload  — a 5x-overload Poisson trace against a bounded
+                deadline-aware queue: shed rate by cause, p99 queue wait,
+                peak queue depth (the survival proof)
 
-Rows persist to ``BENCH_PR7.json`` at the repo root.  Older
+Rows persist to ``BENCH_PR8.json`` at the repo root.  Older
 ``BENCH_PR*.json`` files used ``{name, us_per_call, derived}`` rows;
-``load_bench`` reads both shapes, and a regression guard warns when
-``serving/engine_rps`` drops more than 10% vs the newest prior file.
+``load_bench`` reads both shapes.
+
+Regression gate: by default a >10% drop of ``serving/engine_rps`` vs
+the newest prior ``BENCH_PR*.json`` only WARNS on stderr.  With
+``--check`` the run becomes a merge gate — it compares against the
+newest *committed* bench file (including this PR's), exits nonzero on
+regression, and does not persist rows.  ``BENCH_TOL`` (fraction,
+default 0.10) loosens the gate for slower CI hardware.
 
 Run everything (default) or name sections on argv:
     PYTHONPATH=src python benchmarks/run.py cache_serving
+    PYTHONPATH=src python benchmarks/run.py serving --check   # CI gate
 """
 import glob
 import json
 import os
 import re
+import subprocess
 import sys
+import tempfile
 import time
 
 import numpy as np
@@ -387,6 +403,122 @@ def bench_cache_serving(emit):
     emit('cache_serving/zero_recompiles', 1, 'bool')
 
 
+# child of bench_coldstart: one full serve cold start in a FRESH process
+# (pipeline init + warmup + first tick), persisting compilations to the
+# cache dir in argv[1] and reporting the timings as JSON on stdout.
+_COLDSTART_CHILD = r"""
+import json, os, sys, time
+os.environ['JAX_PLATFORMS'] = 'cpu'
+t_proc = time.perf_counter()
+import jax
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.models.unet import UNetConfig
+from repro.serving import (ContinuousBatchingEngine, GenerationRequest,
+                           cache_entries)
+cfg = UNetConfig('bench-coldstart', img_size=16, in_ch=3, base_ch=32,
+                 ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                 n_heads=4, timesteps=50)
+pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+warmup_s = engine.warmup(cache_dir=sys.argv[1])
+engine.submit(GenerationRequest(request_id=0, seed=1, steps=2), now=0.0)
+engine.run_until_idle(now=0.0)
+print(json.dumps({'warmup_s': warmup_s,
+                  'first_tick_s': engine.metrics.first_tick_s,
+                  'proc_s': time.perf_counter() - t_proc,
+                  'cache_entries': cache_entries(sys.argv[1])}))
+"""
+
+
+def _coldstart_child(cache_dir):
+    env = dict(os.environ)
+    env['PYTHONPATH'] = os.path.join(ROOT, 'src') + (
+        os.pathsep + env['PYTHONPATH'] if env.get('PYTHONPATH') else '')
+    env['JAX_PLATFORMS'] = 'cpu'
+    out = subprocess.run([sys.executable, '-c', _COLDSTART_CHILD, cache_dir],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f'coldstart child failed:\n{out.stderr[-2000:]}')
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def bench_coldstart(emit):
+    """Cold vs warm restart, measured across REAL process boundaries:
+    the same serve bring-up (pipeline init, engine warmup, first tick)
+    runs twice in fresh subprocesses sharing one persistent compilation
+    cache directory.  Run 1 (cold, empty dir) pays the recompile storm
+    and persists every executable; run 2 (warm) loads them from disk —
+    the time-to-first-tick gap is what the persistent cache buys a
+    restarted server."""
+    with tempfile.TemporaryDirectory(prefix='repro-xla-cache-') as d:
+        cold = _coldstart_child(d)
+        assert cold['cache_entries'] > 0, 'cold run persisted nothing'
+        warm = _coldstart_child(d)
+    emit('coldstart/cold_warmup', round(cold['warmup_s'], 3), 's')
+    emit('coldstart/warm_warmup', round(warm['warmup_s'], 3), 's')
+    emit('coldstart/cold_first_tick', round(cold['first_tick_s'], 3), 's')
+    emit('coldstart/warm_first_tick', round(warm['first_tick_s'], 3), 's')
+    emit('coldstart/warmup_speedup',
+         round(cold['warmup_s'] / max(warm['warmup_s'], 1e-9), 2), 'x')
+    emit('coldstart/first_tick_speedup',
+         round(cold['first_tick_s'] / max(warm['first_tick_s'], 1e-9), 2),
+         'x')
+    emit('coldstart/cache_entries', int(cold['cache_entries']), 'files')
+
+
+def bench_overload(emit):
+    """Survival under 5x overload: a Poisson trace offering five times
+    the engine's measured service capacity hits a bounded deadline-aware
+    queue.  The engine must complete what fits, shed the rest (tallied
+    by cause), keep the queue at or under its bound, and never let a
+    deadline-dead request occupy a slot."""
+    import jax
+    from repro.diffusion.pipeline import DiffusionPipeline
+    from repro.models.unet import UNetConfig
+    from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
+                               GenerationRequest, overload_factor)
+    cfg = UNetConfig('bench-overload', img_size=16, in_ch=3, base_ch=32,
+                     ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                     n_heads=4, timesteps=50)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    N, slots, steps, depth, factor = 40, 4, 6, 8, 5.0
+    engine = ContinuousBatchingEngine(
+        pipe, slots=slots, quality_probe=0,
+        queue=AdmissionQueue(max_depth=depth, shed_policy='deadline-aware'))
+    engine.warmup()
+    tick_s = engine.measure_tick_s(steps=steps)
+    capacity_rps = slots / (steps * tick_s)
+    rate = factor * capacity_rps
+    slo_ms = 3.0 * steps * tick_s * 1e3
+    rng = np.random.default_rng(11)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, N))
+    trace = [GenerationRequest(request_id=i, seed=500 + i, steps=steps,
+                               arrival_time=float(arrivals[i]),
+                               slo_ms=slo_ms) for i in range(N)]
+    results = engine.replay(trace)
+    s = engine.metrics.summary()
+    by = engine.metrics.shed_by_reason
+    assert len(results) + int(s['shed']) == N, 'requests lost'
+    assert s['max_queue_depth'] <= depth, 'queue bound broken'
+    assert s['shed'] > 0, '5x overload must shed'
+    emit('overload/offered_x',
+         round(overload_factor(rate, tick_s, steps, slots), 2), 'x')
+    emit('overload/capacity', round(capacity_rps, 2), 'req/s')
+    emit('overload/offered', round(rate, 2), 'req/s')
+    emit('overload/completed', len(results), 'requests')
+    emit('overload/shed', int(s['shed']), 'requests')
+    emit('overload/shed_rate', round(s['shed'] / N, 3), 'fraction')
+    emit('overload/shed_evicted', by.get('deadline_evict', 0), 'requests')
+    emit('overload/shed_expired', by.get('expired', 0), 'requests')
+    emit('overload/shed_queue_full', by.get('queue_full', 0), 'requests')
+    emit('overload/max_queue_depth', int(s['max_queue_depth']), 'requests')
+    emit('overload/queue_bound', depth, 'requests')
+    emit('overload/p50_queue_wait', round(s['p50_queue_wait_ms'], 1), 'ms')
+    emit('overload/p99_queue_wait', round(s['p99_queue_wait_ms'], 1), 'ms')
+    emit('overload/slo', round(slo_ms, 1), 'ms')
+
+
 SECTIONS = {
     'table1': bench_table1,
     'fig8': bench_fig8,
@@ -397,10 +529,12 @@ SECTIONS = {
     'serving': bench_serving,
     'quant_serving': bench_quant_serving,
     'cache_serving': bench_cache_serving,
+    'coldstart': bench_coldstart,
+    'overload': bench_overload,
 }
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
-BENCH_JSON = os.path.join(ROOT, 'BENCH_PR7.json')
+BENCH_JSON = os.path.join(ROOT, 'BENCH_PR8.json')
 
 
 def load_bench(path):
@@ -424,12 +558,16 @@ def load_bench(path):
     return out
 
 
-def _newest_prior_bench():
-    """Newest BENCH_PR<k>.json at the repo root other than the one this
-    run writes (highest k wins — the stacked-PR sequence is the clock)."""
+def _newest_prior_bench(include_current=False):
+    """Newest BENCH_PR<k>.json at the repo root (highest k wins — the
+    stacked-PR sequence is the clock).  Persist runs exclude the file
+    this run writes (it may hold a half-written previous attempt); the
+    ``--check`` gate includes it, because once committed it IS the
+    newest agreed-on baseline."""
     best, best_k = None, -1
     for path in glob.glob(os.path.join(ROOT, 'BENCH_PR*.json')):
-        if os.path.abspath(path) == os.path.abspath(BENCH_JSON):
+        if (not include_current
+                and os.path.abspath(path) == os.path.abspath(BENCH_JSON)):
             continue
         m = re.search(r'BENCH_PR(\d+)\.json$', path)
         if m and int(m.group(1)) > best_k:
@@ -437,31 +575,63 @@ def _newest_prior_bench():
     return best
 
 
-def check_regression(rows, guard='serving/engine_rps', tol=0.10):
-    """Warn (never fail) when this run's ``guard`` metric dropped more
-    than ``tol`` vs the newest prior BENCH_PR*.json.  Returns the warning
-    string (also printed to stderr) or None."""
+def check_regression(rows, guard='serving/engine_rps', tol=None,
+                     fail=False):
+    """Compare this run's ``guard`` metric against the newest committed
+    BENCH_PR*.json.  Default mode warns on stderr and returns the
+    message (or None); gate mode (``fail=True``, i.e. ``--check``) also
+    errors when the guard metric or a baseline is missing — a gate that
+    silently checks nothing is worse than no gate.  Returns
+    (message_or_None, ok) in gate mode.  ``tol`` defaults to the
+    ``BENCH_TOL`` env var (fraction, 0.10) so slower CI hardware can
+    loosen the gate without editing code."""
+    if tol is None:
+        tol = float(os.environ.get('BENCH_TOL', '0.10'))
     new = {name: val for name, val, _ in rows}
+    prior = _newest_prior_bench(include_current=fail)
+
+    def _result(msg, ok):
+        if msg:
+            sys.stderr.write(msg + '\n')
+        return (msg, ok) if fail else msg
+
     if guard not in new:
-        return None
-    prior = _newest_prior_bench()
+        if fail:
+            return _result(f'[benchmarks] GATE ERROR: guard metric '
+                           f'{guard!r} was not produced by this run — '
+                           f'did you skip the serving section?', False)
+        return _result(None, True)
     if prior is None:
-        return None
+        if fail:
+            return _result('[benchmarks] GATE ERROR: no committed '
+                           'BENCH_PR*.json baseline to compare against',
+                           False)
+        return _result(None, True)
     try:
         old = load_bench(prior).get(guard)
         old = float(old) if old is not None else None
         cur = float(new[guard])
     except (TypeError, ValueError):
-        return None
+        old = None
     if not old or old <= 0:
-        return None
+        if fail:
+            return _result(f'[benchmarks] GATE ERROR: baseline '
+                           f'{os.path.basename(prior)} has no usable '
+                           f'{guard!r} value', False)
+        return _result(None, True)
     if cur < (1.0 - tol) * old:
-        msg = (f'[benchmarks] WARNING: {guard} regressed '
-               f'{(1 - cur / old) * 100:.1f}% vs {os.path.basename(prior)}'
-               f' ({old:.3f} -> {cur:.3f} req/s)')
-        sys.stderr.write(msg + '\n')
-        return msg
-    return None
+        kind = 'FAIL' if fail else 'WARNING'
+        return _result(
+            f'[benchmarks] {kind}: {guard} regressed '
+            f'{(1 - cur / old) * 100:.1f}% vs {os.path.basename(prior)}'
+            f' ({old:.3f} -> {cur:.3f} req/s, tolerance {tol:.0%})',
+            False)
+    if fail:
+        return _result(
+            f'[benchmarks] gate OK: {guard} {cur:.3f} req/s vs '
+            f'{old:.3f} in {os.path.basename(prior)} '
+            f'(tolerance {tol:.0%})', True)
+    return _result(None, True)
 
 
 def main() -> None:
@@ -471,13 +641,19 @@ def main() -> None:
         rows.append((name, value, unit))
         print(f'{name},{value},{unit}', flush=True)
 
-    names = sys.argv[1:] or list(SECTIONS)
+    argv = sys.argv[1:]
+    check = '--check' in argv
+    names = [a for a in argv if a != '--check'] or list(SECTIONS)
     unknown = [n for n in names if n not in SECTIONS]
     if unknown:
         sys.exit(f'unknown section(s) {unknown}; pick from {list(SECTIONS)}')
     print('name,value,unit')
     for n in names:
         SECTIONS[n](emit)
+    if check:
+        # merge gate: compare vs the committed baseline, never persist
+        _, ok = check_regression(rows, fail=True)
+        sys.exit(0 if ok else 1)
     check_regression(rows)
     with open(BENCH_JSON, 'w') as f:
         json.dump({'sections': names,

@@ -17,6 +17,23 @@ execution policy — ``fp32`` (GPU digital baseline energy), ``w8a8``
 (the analog MR-bank path, ~94x lower EPB) or ``w8a8+noise`` (8-bit plus
 the analog perturbation model); quantized runs also print the PSNR/MSE
 quality probe against the fp32 reference (the accuracy-vs-EPB frontier).
+
+Cold-start and overload hardening:
+
+``--cache-dir PATH`` routes every XLA compilation through JAX's
+persistent on-disk cache, so a restarted server *loads* its step
+variants instead of recompiling them — the warmup line reports the wall
+seconds and whether the cache was warm.  ``--overload X`` sizes the
+arrival rate at X times the engine's *measured* service capacity
+(``engine.measure_tick_s``), bounds the admission queue
+(``--queue-depth``, default 2x slots) and turns on deadline-aware
+shedding, then proves survival: the queue stays bounded, excess load is
+shed (by cause), no deadline-dead request occupies a slot, and the
+p50/p99 queue waits are reported:
+
+    PYTHONPATH=src python -m repro.launch.serve --diffusion \
+        --overload 5 --requests 32 --slots 4 --steps 6 \
+        --cache-dir /tmp/repro-xla-cache
 """
 from __future__ import annotations
 
@@ -84,28 +101,70 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                     slots: int, precision: str = 'fp32', seed: int = 0,
                     slo_ms=None, quality_probe: int = 1,
                     cache_interval: int = 1, exit_tol=None,
-                    exit_patience: int = 2):
+                    exit_patience: int = 2, cache_dir=None,
+                    queue_depth=None, shed_policy: str = 'reject-newest',
+                    overload: float = 0.0):
     """Replay a Poisson arrival trace through the continuous-batching
     engine and print the serving + energy report, plus the per-policy
     accuracy-vs-EPB frontier.  ``cache_interval > 1`` enables
     DeepCache-phased slotting (full UNet pass every ``cache_interval``
     ticks, shallow passes in between); ``exit_tol`` enables speculative
-    early-exit draining once a request's x0 prediction stops moving."""
+    early-exit draining once a request's x0 prediction stops moving.
+
+    ``cache_dir`` wires the persistent compilation cache into warmup
+    (cold run populates it; a restarted process loads from it).
+    ``overload > 0`` ignores ``rate_hz`` and offers ``overload`` times
+    the engine's measured service capacity, with a bounded queue
+    (``queue_depth``, default ``2 * slots``) and deadline-aware
+    shedding proving the engine survives instead of growing its backlog
+    without bound."""
     from repro.diffusion.pipeline import DiffusionPipeline
     from repro.models.unet import UNetConfig
-    from repro.serving import ContinuousBatchingEngine
+    from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
+                               cache_entries, overload_factor)
 
     cfg = UNetConfig('serve-diffusion', img_size=img, in_ch=3, base_ch=64,
                      ch_mults=(1, 2), n_res_blocks=1,
                      attn_resolutions=(img // 2,), n_heads=4, timesteps=100)
     pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
-    engine = ContinuousBatchingEngine(pipe, slots=slots,
+    queue = None
+    if overload > 0:
+        queue_depth = 2 * slots if queue_depth is None else queue_depth
+        shed_policy = 'deadline-aware'
+    if queue_depth is not None or shed_policy != 'reject-newest':
+        queue = AdmissionQueue(max_depth=queue_depth,
+                               shed_policy=shed_policy)
+    engine = ContinuousBatchingEngine(pipe, slots=slots, queue=queue,
                                       quality_probe=quality_probe,
                                       cache_interval=cache_interval,
                                       exit_tol=exit_tol,
                                       exit_patience=exit_patience)
-    print(f'[serve] warmup (compile, policy={precision})...', flush=True)
-    engine.warmup(precisions=(precision,))
+    entries_before = cache_entries(cache_dir) if cache_dir else 0
+    print(f'[serve] warmup (compile, policy={precision}'
+          + (f', cache_dir={cache_dir}' if cache_dir else '') + ')...',
+          flush=True)
+    warmup_s = engine.warmup(precisions=(precision,), cache_dir=cache_dir)
+    if cache_dir:
+        entries = cache_entries(cache_dir)
+        state = 'warm (loaded from cache)' if entries_before > 0 \
+            else f'cold (persisted {entries} executables)'
+        print(f'[coldstart] warmup {warmup_s:.2f}s — {state}', flush=True)
+    else:
+        print(f'[coldstart] warmup {warmup_s:.2f}s (no persistent cache)',
+              flush=True)
+    if overload > 0:
+        tick_s = engine.measure_tick_s(steps=steps)
+        capacity_rps = slots / (steps * tick_s)
+        rate_hz = overload * capacity_rps
+        if slo_ms is None:
+            # default SLO: 3x the zero-queue service time — generous for
+            # an uncontended request, certain to shed under overload
+            slo_ms = 3.0 * steps * tick_s * 1e3
+        print(f'[overload] measured capacity {capacity_rps:.2f} req/s '
+              f'({tick_s * 1e3:.1f} ms/tick) -> offering '
+              f'{rate_hz:.2f} req/s = {overload_factor(rate_hz, tick_s, steps, slots):.1f}x, '
+              f'queue_depth={queue_depth}, slo={slo_ms:.0f}ms, '
+              f'shed_policy={shed_policy}', flush=True)
     trace = poisson_trace(n_requests, rate_hz, steps, seed, slo_ms=slo_ms,
                           precision=precision)
     sched = []
@@ -124,6 +183,22 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
           f'({s["requests_per_s"]:.2f} req/s) '
           f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms '
           f'slo_viol={int(s["slo_violations"])} shed={int(s["shed"])}')
+    if overload > 0 or s['shed'] > 0:
+        m = engine.metrics
+        by = dict(m.shed_by_reason)
+        print(f'[overload] survived: queue peaked at '
+              f'{int(s["max_queue_depth"])}'
+              + (f'/{queue_depth}' if queue_depth is not None else '')
+              + f', shed {int(s["shed"])}/{n_requests} '
+              f'(queue_full={by.get("queue_full", 0)} '
+              f'evicted={by.get("deadline_evict", 0)} '
+              f'expired={by.get("expired", 0)}), queue wait '
+              f'p50={s["p50_queue_wait_ms"]:.0f}ms '
+              f'p99={s["p99_queue_wait_ms"]:.0f}ms', flush=True)
+        assert len(results) + int(s['shed']) == n_requests, \
+            'requests lost: completed + shed != offered'
+        if queue_depth is not None:
+            assert s['max_queue_depth'] <= queue_depth, 'queue bound broken'
     if cache_interval > 1 or s['steps_saved'] > 0:
         print(f'[sched] cache_hit_rate={s["cache_hit_rate"]:.2f} '
               f'early_exits={int(s["early_exits"])} '
@@ -184,6 +259,22 @@ def main():
                          'tolerance (None/0 = off)')
     ap.add_argument('--exit-patience', type=int, default=2,
                     help='consecutive converged ticks before early exit')
+    ap.add_argument('--cache-dir', default=None,
+                    help='persistent XLA compilation cache directory: a '
+                         'restarted server loads its compiled step '
+                         'variants from here instead of recompiling')
+    ap.add_argument('--queue-depth', type=int, default=None,
+                    help='bound the admission queue (default: unbounded; '
+                         '--overload defaults this to 2x slots)')
+    ap.add_argument('--shed-policy', default='reject-newest',
+                    choices=['reject-newest', 'deadline-aware'],
+                    help='what to shed at the queue bound: the newest '
+                         'arrival, or the entry with the least SLO slack')
+    ap.add_argument('--overload', type=float, default=0.0,
+                    help='offer this multiple of the measured service '
+                         'capacity (ignores --rate; bounds the queue and '
+                         'enables deadline-aware shedding). 5 = the '
+                         'survival trace')
     args = ap.parse_args()
     if args.diffusion:
         precision = args.precision or ('w8a8' if args.w8a8 else 'fp32')
@@ -192,7 +283,11 @@ def main():
                         quality_probe=args.quality_probe,
                         cache_interval=args.cache_interval,
                         exit_tol=args.exit_tol,
-                        exit_patience=args.exit_patience)
+                        exit_patience=args.exit_patience,
+                        cache_dir=args.cache_dir,
+                        queue_depth=args.queue_depth,
+                        shed_policy=args.shed_policy,
+                        overload=args.overload)
         return
     cfg = smoke_config(args.arch) if args.preset == 'smoke' \
         else get(args.arch)

@@ -23,16 +23,23 @@ from repro.core.precision import PrecisionPolicy
 from repro.serving.api import GenerationRequest, GenerationResult
 from repro.serving.batcher import (Bucket, BucketRouter, bucket_for,
                                    choose_slots, group_by_precision,
+                                   offered_load, overload_factor,
                                    split_cache_phase)
+from repro.serving.compile_cache import (active_cache_dir, cache_entries,
+                                         disable_persistent_cache,
+                                         enable_persistent_cache)
 from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.metrics import (FrontierPoint, PhotonicAccountant,
                                    ServingMetrics)
-from repro.serving.queue import AdmissionQueue
+from repro.serving.queue import SHED_POLICIES, AdmissionQueue
 
 __all__ = [
     'GenerationRequest', 'GenerationResult', 'ContinuousBatchingEngine',
-    'AdmissionQueue', 'ServingMetrics', 'PhotonicAccountant',
-    'PrecisionPolicy', 'FrontierPoint',
+    'AdmissionQueue', 'SHED_POLICIES', 'ServingMetrics',
+    'PhotonicAccountant', 'PrecisionPolicy', 'FrontierPoint',
     'Bucket', 'BucketRouter', 'bucket_for', 'choose_slots',
-    'group_by_precision', 'split_cache_phase',
+    'group_by_precision', 'offered_load', 'overload_factor',
+    'split_cache_phase',
+    'enable_persistent_cache', 'disable_persistent_cache',
+    'active_cache_dir', 'cache_entries',
 ]

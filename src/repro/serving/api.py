@@ -30,8 +30,13 @@ class GenerationRequest:
     ``arrival_time`` is the request's nominal arrival on the serving
     clock (seconds; used by trace replay).  ``priority``: larger values
     are admitted first; FIFO within a class.  ``slo_ms``: optional
-    end-to-end latency objective — violations are tallied in the
-    metrics, never enforced by dropping work.  ``precision``: one of
+    end-to-end latency objective.  Violations of completed requests are
+    always tallied in the metrics; additionally, when the engine's
+    ``AdmissionQueue`` runs the ``'deadline-aware'`` shed policy, the
+    SLO becomes an absolute deadline (``enqueue + slo_ms``): at the
+    queue's depth bound the entry with the least slack is shed first,
+    and a request whose deadline passes while queued is dropped at
+    admission instead of occupying a slot.  ``precision``: one of
     ``'fp32' | 'w8a8' | 'w8a8+noise'`` — the execution policy for this
     request's UNet evaluations.
 
@@ -68,6 +73,9 @@ class GenerationRequest:
             raise ValueError(
                 f'request {self.request_id}: unknown precision '
                 f'{self.precision!r} (expected one of {PRECISION_NAMES})')
+        if self.slo_ms is not None and self.slo_ms <= 0:
+            raise ValueError(f'request {self.request_id}: slo_ms must be '
+                             '> 0 when given')
         if self.cache_interval is not None and self.cache_interval < 1:
             raise ValueError(f'request {self.request_id}: cache_interval '
                              'must be >= 1 when given')

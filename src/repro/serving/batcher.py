@@ -78,6 +78,32 @@ def _per_precision(value, key):
     return value[key] if isinstance(value, Mapping) else value
 
 
+def offered_load(arrival_rate_hz, step_time_s, mean_steps) -> float:
+    """Expected in-flight requests (Little's law L = lambda x W, with
+    W ~ steps x step_time) for the offered traffic.  Each term may be a
+    scalar or a per-precision mapping; per-precision loads add because
+    the precisions share one slot buffer."""
+    if isinstance(arrival_rate_hz, Mapping):
+        return sum(
+            rate * _per_precision(mean_steps, k) * _per_precision(
+                step_time_s, k)
+            for k, rate in arrival_rate_hz.items() if rate > 0)
+    if arrival_rate_hz <= 0 or step_time_s <= 0 or mean_steps <= 0:
+        return 0.0
+    return arrival_rate_hz * mean_steps * step_time_s
+
+
+def overload_factor(arrival_rate_hz, step_time_s, mean_steps,
+                    slots: int) -> float:
+    """Offered load over slot capacity: > 1 means arrivals exceed what
+    ``slots`` concurrent requests can drain and a bounded queue WILL
+    shed — the sizing anchor for overload traces (a "5x overload" trace
+    has ``overload_factor == 5``)."""
+    if slots < 1:
+        raise ValueError('need at least one slot')
+    return offered_load(arrival_rate_hz, step_time_s, mean_steps) / slots
+
+
 def choose_slots(arrival_rate_hz, step_time_s, mean_steps,
                  target_util: float = 0.8, max_slots: int = 64) -> int:
     """Little's law slot sizing: L = lambda x W, W ~ steps x step_time.
@@ -88,17 +114,9 @@ def choose_slots(arrival_rate_hz, step_time_s, mean_steps,
     in-flight counts add.  Returns the slot count that keeps expected
     occupancy at ``target_util`` of the buffer, clamped to [1, max_slots].
     """
-    if isinstance(arrival_rate_hz, Mapping):
-        in_flight = sum(
-            rate * _per_precision(mean_steps, k) * _per_precision(
-                step_time_s, k)
-            for k, rate in arrival_rate_hz.items() if rate > 0)
-        if in_flight <= 0:
-            return 1
-        return max(1, min(max_slots, math.ceil(in_flight / target_util)))
-    if arrival_rate_hz <= 0 or step_time_s <= 0 or mean_steps <= 0:
+    in_flight = offered_load(arrival_rate_hz, step_time_s, mean_steps)
+    if in_flight <= 0:
         return 1
-    in_flight = arrival_rate_hz * mean_steps * step_time_s
     return max(1, min(max_slots, math.ceil(in_flight / target_util)))
 
 

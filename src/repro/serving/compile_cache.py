@@ -1,0 +1,120 @@
+"""Persistent compilation cache wiring — cold-start hardening.
+
+A restarted serving process pays one XLA compilation per
+``(precision, guided, refresh)`` step variant before it can serve its
+first request: the recompile storm.  JAX's persistent compilation cache
+keys each compiled executable by the hash of its lowered HLO and stores
+it on disk, so a warm restart *loads* every step variant instead of
+recompiling it — time-to-first-tick drops from compile-bound to
+deserialize-bound.
+
+``enable_persistent_cache`` routes every subsequent compilation in this
+process through an on-disk directory.  It is process-global (the cache
+is keyed by HLO hash, so unrelated programs sharing a directory are
+fine) and idempotent.  The thresholds default to "cache everything":
+the CPU-scale demo UNets compile in well under JAX's default 1-second
+floor, which would silently skip them.
+
+Usage (the engine and ``launch/serve.py --cache-dir`` call this for
+you)::
+
+    from repro.serving.compile_cache import enable_persistent_cache
+    enable_persistent_cache('/var/cache/repro-xla')
+    engine.warmup(precisions=('fp32', 'w8a8'))   # cold: compiles + stores
+    # ... restart the process ...
+    engine.warmup(precisions=('fp32', 'w8a8'))   # warm: loads from disk
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+#: The directory routed through ``enable_persistent_cache`` in this
+#: process, or None when the persistent cache is off.
+_ACTIVE_DIR: Optional[str] = None
+
+#: Optional config flags applied best-effort (names vary across JAX
+#: releases; absence is not an error).
+_OPTIONAL_FLAGS = (
+    # let XLA's own autotune/kernel caches piggyback on the directory
+    ('jax_persistent_cache_enable_xla_caches', 'all'),
+)
+
+
+def enable_persistent_cache(cache_dir: str,
+                            min_entry_size_bytes: int = -1,
+                            min_compile_time_secs: float = 0.0) -> str:
+    """Route every XLA compilation through a persistent on-disk cache.
+
+    Creates ``cache_dir`` if needed and returns its absolute path.
+    ``min_entry_size_bytes=-1`` / ``min_compile_time_secs=0.0`` cache
+    every executable regardless of size or compile time (JAX's defaults
+    skip sub-second compiles, which covers every CPU-scale demo model).
+    Idempotent: re-enabling with the same directory is a no-op.
+    """
+    cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
+    os.makedirs(cache_dir, exist_ok=True)
+    global _ACTIVE_DIR
+    try:
+        jax.config.update('jax_compilation_cache_dir', cache_dir)
+        jax.config.update('jax_persistent_cache_min_entry_size_bytes',
+                          min_entry_size_bytes)
+        jax.config.update('jax_persistent_cache_min_compile_time_secs',
+                          min_compile_time_secs)
+    except AttributeError:                         # pragma: no cover
+        # very old JAX: the experimental module is the only spelling
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        cc.set_cache_dir(cache_dir)
+    for flag, value in _OPTIONAL_FLAGS:
+        try:
+            jax.config.update(flag, value)
+        except (AttributeError, ValueError):       # pragma: no cover
+            pass
+    _reset_cache_state()
+    _ACTIVE_DIR = cache_dir
+    return cache_dir
+
+
+def _reset_cache_state() -> None:
+    """Drop JAX's latched cache-used decision.  JAX checks "is a cache
+    configured?" once, at the first compilation of the process — a serve
+    process that compiled anything (even backend init probes) before
+    ``enable_persistent_cache`` would otherwise silently never persist.
+    The on-disk entries are untouched; only process state resets."""
+    try:
+        from jax.experimental.compilation_cache import (
+            compilation_cache as cc)
+        cc.reset_cache()
+    except Exception:                              # pragma: no cover
+        pass
+
+
+def disable_persistent_cache() -> None:
+    """Turn the persistent cache off for subsequent compilations (tests
+    use this to avoid leaking a temporary directory into later work)."""
+    global _ACTIVE_DIR
+    try:
+        jax.config.update('jax_compilation_cache_dir', None)
+    except AttributeError:                         # pragma: no cover
+        pass
+    _reset_cache_state()
+    _ACTIVE_DIR = None
+
+
+def active_cache_dir() -> Optional[str]:
+    """The directory enabled in this process, or None."""
+    return _ACTIVE_DIR
+
+
+def cache_entries(cache_dir: Optional[str] = None) -> int:
+    """Number of persisted executables in ``cache_dir`` (default: the
+    active directory).  0 when the cache is off or the directory is
+    empty — a cold/warm probe compares this before and after warmup."""
+    d = cache_dir or _ACTIVE_DIR
+    if d is None or not os.path.isdir(d):
+        return 0
+    return sum(1 for name in os.listdir(d)
+               if os.path.isfile(os.path.join(d, name)))

@@ -53,6 +53,24 @@ recompilations, which ``compile_stats()`` exposes for tests to assert;
 enabling caching adds exactly the refresh/skip pair per (policy,
 guided), never more.
 
+Cold-start and overload hardening:
+
+  * ``warmup(..., cache_dir=...)`` routes every compilation through
+    JAX's persistent on-disk cache (``serving/compile_cache.py``), so a
+    restarted engine *loads* its step variants instead of recompiling —
+    the recompile storm becomes a cache read.  ``aot_warmup`` pre-lowers
+    and compiles every ``(precision, guided, refresh)`` step variant the
+    request mix can reach (plus the fixed-shape helpers) WITHOUT running
+    a tick, populating the persistent cache ahead of time.  Warmup wall
+    time and the time-to-first-served-tick are recorded in the metrics
+    (``warmup_s`` / ``first_tick_s``).
+  * Overload: give the engine a bounded ``AdmissionQueue(max_depth=...,
+    shed_policy='deadline-aware')`` and excess arrivals are shed instead
+    of growing the backlog; at admission the engine expires queued
+    requests whose deadline already passed, so a dead request never
+    occupies a slot.  Sheds are tallied by cause in the metrics, along
+    with p50/p99 queue wait and the peak queue depth.
+
 Output equivalence: with eta=0 DDIM is deterministic given the initial
 noise, and both the UNet and the per-row w8a8 activation scales treat
 batch elements independently, so a request served through the engine —
@@ -131,6 +149,7 @@ class ContinuousBatchingEngine:
             raise ValueError('need at least one slot')
         if cache_interval < 1:
             raise ValueError('cache_interval must be >= 1')
+        self._created = time.perf_counter()   # time-to-first-tick origin
         self.pipe = pipe
         self.slots = slots
         self.context = context
@@ -364,11 +383,17 @@ class ContinuousBatchingEngine:
     def submit(self, req: GenerationRequest,
                now: Optional[float] = None) -> bool:
         now = time.perf_counter() if now is None else now
+        evicted0 = getattr(self.queue, 'evicted', 0)
         ok = self.queue.submit(req, now)
         if ok:
             self.metrics.record_submit(now)
         else:
-            self.metrics.record_shed()      # queue bound: load was shed
+            self.metrics.record_shed('queue_full')   # arrival turned away
+        if getattr(self.queue, 'evicted', 0) > evicted0:
+            # deadline-aware shed: a queued entry lost its place to this
+            # arrival because it had the least SLO slack
+            self.metrics.record_shed('deadline_evict')
+        self.metrics.observe_queue_depth(len(self.queue))
         return ok
 
     def _trajectory(self, steps: int) -> np.ndarray:
@@ -381,6 +406,11 @@ class ContinuousBatchingEngine:
         return sum(a is not None and a.cache_on for a in self._slot)
 
     def _admit(self, now: float) -> None:
+        if getattr(self.queue, 'shed_policy', None) == 'deadline-aware':
+            # a request whose deadline passed while queued must never
+            # occupy a slot — shed it at admission instead
+            for _ in self.queue.expire(now):
+                self.metrics.record_shed('expired')
         if self.cache_interval > 1:
             if self._cached_active() == 0:
                 # nothing riding the cadence: re-anchor it so admission
@@ -564,6 +594,12 @@ class ContinuousBatchingEngine:
                     self.x, self.x0, d = step_fn(
                         self.x, self.x0, t_d, tp_d, m_d, g_d, key)
                 delta_parts.append((m, d))
+        if self.metrics.first_tick_s is None:
+            # cold-start probe: time-to-first-served-tick, device work
+            # included (one extra sync, paid once per metrics object)
+            jax.block_until_ready(self.x)
+            self.metrics.record_first_tick(
+                time.perf_counter() - self._created)
         # x0-convergence deltas: materialized (one tiny device sync) only
         # when some active slot is actually early-exit eligible this tick
         deltas = np.zeros(self.slots, np.float32)
@@ -632,14 +668,26 @@ class ContinuousBatchingEngine:
                                      wall_clock=True))
         raise RuntimeError('replay exceeded max_ticks')
 
-    def warmup(self, precisions=('fp32',)) -> None:
+    def warmup(self, precisions=('fp32',),
+               cache_dir: Optional[str] = None) -> float:
         """Compile every code path (per-policy steps, place, take, decode
         — and, with caching on, the refresh AND skip variants) with
         throwaway requests so serving ticks never pay compile time.
         Pass every precision the engine will serve — e.g.
         ``warmup(('fp32', 'w8a8', 'w8a8+noise'))`` — one step compile per
         (policy, guided) pair (times the refresh/skip pair when caching),
-        zero recompiles after."""
+        zero recompiles after.
+
+        ``cache_dir`` routes every compilation through JAX's persistent
+        on-disk cache first (``compile_cache.enable_persistent_cache``):
+        the first (cold) warmup populates the directory, every later
+        warmup in a fresh process loads executables from it instead of
+        recompiling.  Returns wall seconds spent, also recorded in the
+        metrics (``warmup_s``)."""
+        if cache_dir is not None:
+            from repro.serving.compile_cache import enable_persistent_cache
+            enable_persistent_cache(cache_dir)
+        t0 = time.perf_counter()
         saved_q, saved_m = self.queue, self.metrics
         saved_probe = self.quality_probe
         self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
@@ -664,3 +712,94 @@ class ContinuousBatchingEngine:
         finally:
             self.queue, self.metrics = saved_q, saved_m
             self.quality_probe = saved_probe
+        dt = time.perf_counter() - t0
+        self.metrics.record_warmup(dt)
+        return dt
+
+    def step_variants(self, precisions=('fp32',)):
+        """Every ``(precision, guided, refresh)`` step variant the given
+        request mix can reach on this engine: guided variants exist only
+        when the engine holds conditioning ``context``; refresh/skip
+        variants only when DeepCache phasing is on (``refresh`` is None
+        for the plain uncached step)."""
+        guided_opts = (False, True) if self.context is not None else (False,)
+        out = []
+        for pname in precisions:
+            for guided in guided_opts:
+                if self.cache_interval > 1:
+                    out.append((pname, guided, True))
+                    out.append((pname, guided, False))
+                else:
+                    out.append((pname, guided, None))
+        return out
+
+    def aot_warmup(self, precisions=('fp32',),
+                   cache_dir: Optional[str] = None) -> Dict[str, float]:
+        """Ahead-of-time warmup: pre-lower and compile every step variant
+        in ``step_variants(precisions)`` plus the fixed-shape helpers
+        (init-noise, place, take, decode) WITHOUT executing a tick.
+
+        With a persistent compilation cache enabled (``cache_dir`` or a
+        prior ``enable_persistent_cache`` call) every executable lands on
+        disk, so a restarted process — or this one's first served tick —
+        finds a cache hit instead of paying XLA compilation.  Returns
+        ``{'variants': count, 'seconds': wall}``."""
+        if cache_dir is not None:
+            from repro.serving.compile_cache import enable_persistent_cache
+            enable_persistent_cache(cache_dir)
+        t0 = time.perf_counter()
+        S = jax.ShapeDtypeStruct
+        xs = S((self.slots,) + self._sample_shape, jnp.float32)
+        ti = S((self.slots,), jnp.int32)
+        act = S((self.slots,), jnp.bool_)
+        gd = S((self.slots,), jnp.float32)
+        key = S(self._zero_key.shape, self._zero_key.dtype)
+        n = 0
+        for pname, guided, refresh in self.step_variants(precisions):
+            if refresh is None:
+                fn = self._get_step(pname, guided)
+                fn.lower(xs, xs, ti, ti, act, gd, key).compile()
+            else:
+                fn = self._get_cached_step(pname, guided, refresh)
+                cs = S(self._cache_c.shape, self._cache_c.dtype)
+                if guided:
+                    fn.lower(xs, xs, cs, cs, ti, ti, act, gd,
+                             key).compile()
+                else:
+                    fn.lower(xs, xs, cs, ti, ti, act, gd, key).compile()
+            n += 1
+        idx = S((), jnp.int32)
+        sample = S(self._sample_shape, jnp.float32)
+        self._init_noise.lower(key).compile()
+        self._place.lower(xs, idx, sample).compile()
+        self._take.lower(xs, idx).compile()
+        n += 3
+        if self._decode is not None:
+            self._decode.lower(S((1,) + self._sample_shape,
+                                 jnp.float32)).compile()
+            n += 1
+        return {'variants': n, 'seconds': time.perf_counter() - t0}
+
+    def measure_tick_s(self, steps: int = 4) -> float:
+        """Steady-state wall seconds per engine tick at full slot
+        occupancy (throwaway requests, metrics untouched) — the service
+        capacity anchor for overload sizing: the engine completes
+        ``slots / (steps * tick_s)`` requests/s.  Call after warmup so
+        no compile time leaks into the measurement."""
+        saved_q, saved_m = self.queue, self.metrics
+        saved_probe = self.quality_probe
+        self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
+        self.quality_probe = 0
+        try:
+            for i in range(self.slots):
+                self.submit(GenerationRequest(request_id=-(100 + i),
+                                              seed=i, steps=steps,
+                                              exit_tol=0.0), now=0.0)
+            t0 = time.perf_counter()
+            self.run_until_idle(now=0.0)
+            dt = time.perf_counter() - t0
+            ticks = max(self.metrics.ticks, 1)
+        finally:
+            self.queue, self.metrics = saved_q, saved_m
+            self.quality_probe = saved_probe
+        return dt / ticks

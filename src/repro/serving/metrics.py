@@ -14,10 +14,21 @@ attributed the paper's Fig. 10 GPU digital baseline (EPB anchored at
 per-request precision knob trades against quality.
 
 ``ServingMetrics`` keeps the queue/latency ledger (p50/p95 latency,
-requests/s, tick/occupancy counters, SLO violations) plus the frontier:
-one ``FrontierPoint`` per completed request (precision, EPB, energy,
-PSNR/MSE vs the fp32 reference when probed) and per-policy aggregates
-surfaced in every snapshot.  All counters are monotone in completed work.
+p50/p99 queue wait, requests/s, tick/occupancy counters, SLO
+violations) plus the frontier: one ``FrontierPoint`` per completed
+request (precision, EPB, energy, PSNR/MSE vs the fp32 reference when
+probed) and per-policy aggregates surfaced in every snapshot.  All
+counters are monotone in completed work.
+
+Operability counters added by the cold-start / overload hardening:
+``warmup_s`` (wall seconds the engine spent compiling at warmup),
+``first_tick_s`` (engine construction to the completion of the first
+*served* tick — the time-to-first-tick a restart pays), ``shed``
+broken down by cause (``queue_full`` arrivals rejected at the depth
+bound, ``deadline_evict`` queued entries displaced by deadline-aware
+shedding, ``expired`` entries whose deadline passed while queued) and
+``max_queue_depth`` (peak observed backlog — bounded queues stay at or
+under their ``max_depth``).
 """
 from __future__ import annotations
 
@@ -134,7 +145,15 @@ class MetricsSnapshot:
     requests_per_s: float
     total_energy_j: float
     slo_violations: int
-    shed: int = 0                # admissions rejected by the queue bound
+    shed: int = 0                # total requests shed (all causes)
+    shed_by_reason: Dict[str, int] = dataclasses.field(
+        default_factory=dict)    # queue_full / deadline_evict / expired
+    p50_queue_wait_s: float = 0.0
+    p99_queue_wait_s: float = 0.0
+    max_queue_depth: int = 0     # peak backlog observed at submit time
+    # cold-start accounting (0.0 when never recorded)
+    warmup_s: float = 0.0        # wall seconds spent in engine warmup
+    first_tick_s: float = 0.0    # construction -> first served tick done
     # DeepCache / early-exit scheduler counters
     full_steps: int = 0          # slot-steps run as full UNet passes
     cached_steps: int = 0        # slot-steps run as shallow (skip) passes
@@ -158,6 +177,11 @@ class ServingMetrics:
         self.total_energy_j = 0.0
         self.slo_violations = 0
         self.shed = 0
+        self.shed_by_reason: Dict[str, int] = {}
+        self.max_queue_depth = 0
+        self.warmup_s: Optional[float] = None
+        self.first_tick_s: Optional[float] = None
+        self._queue_waits: List[float] = []     # kept sorted
         self.full_steps = 0
         self.cached_steps = 0
         self.mixed_ticks = 0
@@ -177,9 +201,30 @@ class ServingMetrics:
         if self._first_submit is None or now < self._first_submit:
             self._first_submit = now
 
-    def record_shed(self):
-        """One admission rejected by the queue's depth bound."""
+    def record_shed(self, reason: str = 'queue_full'):
+        """One request shed.  ``reason``: ``'queue_full'`` (arrival
+        rejected at the depth bound), ``'deadline_evict'`` (queued entry
+        displaced by deadline-aware shedding) or ``'expired'`` (deadline
+        passed while queued — dropped at admission)."""
         self.shed += 1
+        self.shed_by_reason[reason] = self.shed_by_reason.get(reason, 0) + 1
+
+    def observe_queue_depth(self, depth: int):
+        """Track the peak backlog — a bounded queue's proof of bound."""
+        if depth > self.max_queue_depth:
+            self.max_queue_depth = depth
+
+    def record_warmup(self, seconds: float):
+        """Wall seconds spent compiling in ``engine.warmup`` (cumulative
+        across warmup calls — one per served policy set)."""
+        self.warmup_s = seconds if self.warmup_s is None \
+            else self.warmup_s + seconds
+
+    def record_first_tick(self, seconds: float):
+        """Engine construction to completion of the first served tick —
+        the cold-start time-to-first-tick.  First call wins."""
+        if self.first_tick_s is None:
+            self.first_tick_s = seconds
 
     def record_tick(self, active_slots: int,
                     full_slots: Optional[int] = None,
@@ -208,6 +253,7 @@ class ServingMetrics:
         self.completed += 1
         self.results.append(res)
         bisect.insort(self._latencies, res.latency_s)
+        bisect.insort(self._queue_waits, res.queue_delay_s)
         self.total_energy_j += res.energy_j
         self._last_finish = res.finish_time if self._last_finish is None \
             else max(self._last_finish, res.finish_time)
@@ -246,13 +292,23 @@ class ServingMetrics:
                 d['psnr_sum'] += res.quality_psnr_db
 
     # -- reading -----------------------------------------------------------
+    @staticmethod
+    def _percentile(sorted_vals: List[float], p: float) -> float:
+        """Nearest-rank percentile over a pre-sorted list (0.0 empty)."""
+        if not sorted_vals:
+            return 0.0
+        idx = min(len(sorted_vals) - 1,
+                  max(0, int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+        return sorted_vals[idx]
+
     def percentile_latency(self, p: float) -> float:
         """Nearest-rank latency percentile over completed requests."""
-        if not self._latencies:
-            return 0.0
-        idx = min(len(self._latencies) - 1,
-                  max(0, int(round(p / 100.0 * (len(self._latencies) - 1)))))
-        return self._latencies[idx]
+        return self._percentile(self._latencies, p)
+
+    def percentile_queue_wait(self, p: float) -> float:
+        """Nearest-rank queue-wait (submit -> slot start) percentile
+        over completed requests."""
+        return self._percentile(self._queue_waits, p)
 
     def requests_per_s(self) -> float:
         if (self.completed == 0 or self._first_submit is None
@@ -310,6 +366,12 @@ class ServingMetrics:
             total_energy_j=self.total_energy_j,
             slo_violations=self.slo_violations,
             shed=self.shed,
+            shed_by_reason=dict(self.shed_by_reason),
+            p50_queue_wait_s=self.percentile_queue_wait(50),
+            p99_queue_wait_s=self.percentile_queue_wait(99),
+            max_queue_depth=self.max_queue_depth,
+            warmup_s=self.warmup_s or 0.0,
+            first_tick_s=self.first_tick_s or 0.0,
             full_steps=self.full_steps,
             cached_steps=self.cached_steps,
             cache_hit_rate=self.cache_hit_rate,
@@ -331,6 +393,14 @@ class ServingMetrics:
                                       max(s.completed, 1)),
             'slo_violations': float(s.slo_violations),
             'shed': float(s.shed),
+            'deadline_sheds': float(
+                s.shed_by_reason.get('deadline_evict', 0)
+                + s.shed_by_reason.get('expired', 0)),
+            'p50_queue_wait_ms': s.p50_queue_wait_s * 1e3,
+            'p99_queue_wait_ms': s.p99_queue_wait_s * 1e3,
+            'max_queue_depth': float(s.max_queue_depth),
+            'warmup_s': s.warmup_s,
+            'first_tick_s': s.first_tick_s,
             'cache_hit_rate': s.cache_hit_rate,
             'early_exits': float(s.early_exits),
             'steps_saved': float(s.steps_saved),

@@ -1,45 +1,107 @@
-"""Admission queue: priority classes with FIFO order inside each class.
+"""Admission queue: priority classes with FIFO order inside each class,
+a hard depth bound, and SLO-aware load shedding.
 
 Pure host-side bookkeeping — nothing here touches a device.  The queue
-stamps each request's enqueue time so the engine can attribute queueing
+stamps each request's enqueue time (and absolute deadline, when the
+request carries an ``slo_ms``) so the engine can attribute queueing
 delay separately from service time, and keeps an optional depth bound so
-overload turns into rejected admissions instead of unbounded memory.
+overload turns into *shed* load instead of unbounded memory.
+
+Two shedding policies govern what happens when the bound is hit:
+
+* ``'reject-newest'`` (default): the incoming request is turned away —
+  classic tail drop, FIFO fairness, no reordering.
+* ``'deadline-aware'``: the queued entry with the *earliest* absolute
+  deadline (the one most likely to miss its SLO anyway) is evicted in
+  favor of an incoming request with more slack; an arrival with less
+  slack than everything queued is rejected instead.  Entries without an
+  SLO have an infinite deadline and are never evicted.  Pair this with
+  ``expire()`` — called by the engine before admission — so a request
+  whose deadline already passed while queued is dropped rather than
+  occupying a denoising slot it can only waste.
+
+Shed accounting is split by cause: ``rejected`` (arrivals turned away at
+the bound), ``evicted`` (queued entries displaced by deadline-aware
+shedding) and ``expired`` (entries whose deadline passed while queued);
+``shed`` is their sum.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import List, Optional, Tuple
 
 from repro.serving.api import GenerationRequest
 
+#: Valid ``shed_policy`` values.
+SHED_POLICIES = ('reject-newest', 'deadline-aware')
+
 
 @dataclasses.dataclass(frozen=True)
 class Queued:
-    """A request plus its admission bookkeeping."""
+    """A request plus its admission bookkeeping.  ``deadline`` is the
+    absolute serving-clock time by which the request must finish
+    (``enqueue_time + slo_ms/1e3``; +inf when the request has no SLO)."""
     request: GenerationRequest
     enqueue_time: float
+    deadline: float = math.inf
 
 
 class AdmissionQueue:
-    def __init__(self, max_depth: Optional[int] = None):
+    def __init__(self, max_depth: Optional[int] = None,
+                 shed_policy: str = 'reject-newest'):
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f'unknown shed_policy {shed_policy!r} '
+                             f'(expected one of {SHED_POLICIES})')
         self.max_depth = max_depth
+        self.shed_policy = shed_policy
         self._heap: List[Tuple[int, int, Queued]] = []
         self._seq = 0                 # FIFO tiebreak within a priority
         self.submitted = 0
-        self.rejected = 0
+        self.rejected = 0             # arrivals turned away at the bound
+        self.evicted = 0              # queued entries displaced (deadline)
+        self.expired = 0              # deadline passed while queued
 
     def __len__(self) -> int:
         return len(self._heap)
 
+    @property
+    def shed(self) -> int:
+        """Total requests shed, across all causes."""
+        return self.rejected + self.evicted + self.expired
+
+    @staticmethod
+    def _deadline(req: GenerationRequest, now: float) -> float:
+        return math.inf if req.slo_ms is None else now + req.slo_ms / 1e3
+
     def submit(self, req: GenerationRequest, now: float = 0.0) -> bool:
-        """Enqueue; returns False (rejected) when the queue is full."""
+        """Enqueue; returns False when the request was rejected.
+
+        At the depth bound, ``'reject-newest'`` always returns False;
+        ``'deadline-aware'`` evicts the queued entry with the earliest
+        deadline when the arrival has strictly more slack (the arrival
+        is admitted and ``evicted`` ticks up), and rejects the arrival
+        otherwise."""
+        deadline = self._deadline(req, now)
         if self.max_depth is not None and len(self._heap) >= self.max_depth:
-            self.rejected += 1
-            return False
+            if self.shed_policy == 'deadline-aware' and self._heap:
+                victim_i = min(range(len(self._heap)),
+                               key=lambda i: (self._heap[i][2].deadline,
+                                              -self._heap[i][1]))
+                if self._heap[victim_i][2].deadline < deadline:
+                    self._heap.pop(victim_i)
+                    heapq.heapify(self._heap)
+                    self.evicted += 1
+                else:
+                    self.rejected += 1
+                    return False
+            else:
+                self.rejected += 1
+                return False
         self._seq += 1
-        heapq.heappush(self._heap,
-                       (-req.priority, self._seq, Queued(req, now)))
+        heapq.heappush(self._heap, (-req.priority, self._seq,
+                                    Queued(req, now, deadline)))
         self.submitted += 1
         return True
 
@@ -56,6 +118,23 @@ class AdmissionQueue:
         if not self._heap:
             return None
         return self._heap[0][2]
+
+    def expire(self, now: float,
+               margin_s: float = 0.0) -> List[Queued]:
+        """Remove and return every queued entry whose deadline has
+        already passed (``deadline < now + margin_s``) — a dead request
+        must never occupy a denoising slot.  ``margin_s`` lets the
+        caller fold in an estimated service time so a request that
+        *will* miss by the time it finishes is shed at admission too.
+        Counts into ``expired``."""
+        cutoff = now + margin_s
+        dead = [e for e in self._heap if e[2].deadline < cutoff]
+        if not dead:
+            return []
+        self._heap = [e for e in self._heap if e[2].deadline >= cutoff]
+        heapq.heapify(self._heap)
+        self.expired += len(dead)
+        return [q for _, _, q in sorted(dead, key=lambda e: e[1])]
 
     def oldest_wait(self, now: float) -> float:
         """Age of the oldest queued request (0 when empty)."""

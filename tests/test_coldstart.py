@@ -1,0 +1,180 @@
+"""Cold-start hardening tests: persistent compilation cache wiring,
+warmup/first-tick accounting, AOT pre-lowering of every step variant,
+and a real process-restart check (cold populates the cache, warm loads
+from it and is faster)."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import pytest
+
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.models.unet import UNetConfig
+from repro.serving import (ContinuousBatchingEngine, GenerationRequest,
+                           active_cache_dir, cache_entries,
+                           disable_persistent_cache,
+                           enable_persistent_cache)
+
+TINY = UNetConfig('tiny-cold', img_size=16, in_ch=3, base_ch=32,
+                  ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                  n_heads=4, timesteps=16)
+
+
+@pytest.fixture(scope='module')
+def pipe():
+    return DiffusionPipeline.init(jax.random.PRNGKey(0), TINY)
+
+
+# ---------------------------------------------------------------------------
+# compile_cache wiring
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.coldstart
+def test_enable_persistent_cache_configures_jax():
+    with tempfile.TemporaryDirectory() as d:
+        target = os.path.join(d, 'xla-cache')
+        try:
+            path = enable_persistent_cache(target)
+            assert os.path.isdir(path)
+            assert active_cache_dir() == path
+            assert jax.config.jax_compilation_cache_dir == path
+            assert cache_entries() == 0          # enabled, nothing stored
+        finally:
+            disable_persistent_cache()
+        assert active_cache_dir() is None
+        assert jax.config.jax_compilation_cache_dir is None
+
+
+@pytest.mark.coldstart
+def test_cache_entries_handles_missing_and_inactive():
+    assert cache_entries('/nonexistent/no-such-cache-dir') == 0
+    assert active_cache_dir() is None
+    assert cache_entries() == 0                  # nothing active
+
+
+# ---------------------------------------------------------------------------
+# warmup / first-tick accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.coldstart
+def test_warmup_and_first_tick_recorded(pipe):
+    engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    dt = engine.warmup()
+    assert dt > 0.0
+    assert engine.metrics.warmup_s == pytest.approx(dt)
+    assert engine.metrics.first_tick_s is None   # nothing served yet
+    engine.submit(GenerationRequest(request_id=0, seed=1, steps=2), now=0.0)
+    engine.run_until_idle(now=0.0)
+    first = engine.metrics.first_tick_s
+    assert first is not None and first > 0.0
+    # only the FIRST served tick defines time-to-first-tick
+    engine.submit(GenerationRequest(request_id=1, seed=2, steps=2), now=0.0)
+    engine.run_until_idle(now=0.0)
+    assert engine.metrics.first_tick_s == first
+    s = engine.metrics.summary()
+    assert s['warmup_s'] == pytest.approx(dt)
+    assert s['first_tick_s'] == pytest.approx(first)
+
+
+# ---------------------------------------------------------------------------
+# AOT pre-lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.coldstart
+def test_step_variants_enumeration(pipe):
+    plain = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    assert plain.step_variants(('fp32',)) == [('fp32', False, None)]
+    assert len(plain.step_variants(('fp32', 'w8a8'))) == 2
+
+    cached = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0,
+                                      cache_interval=2)
+    assert cached.step_variants(('fp32',)) == [('fp32', False, True),
+                                               ('fp32', False, False)]
+
+    ctx_cfg = UNetConfig('tiny-cold-ctx', img_size=16, in_ch=3, base_ch=32,
+                         ch_mults=(1, 2), n_res_blocks=1,
+                         attn_resolutions=(8,), n_heads=4, timesteps=16,
+                         context_dim=8)
+    p = DiffusionPipeline.init(jax.random.PRNGKey(0), ctx_cfg)
+    ctx = jax.random.normal(jax.random.PRNGKey(9), (2, 4, 8))
+    guided = ContinuousBatchingEngine(p, slots=2, context=ctx,
+                                      quality_probe=0, cache_interval=2)
+    # 2 precisions x {unguided, guided} x {refresh, skip} = 8
+    assert len(guided.step_variants(('fp32', 'w8a8'))) == 8
+
+
+@pytest.mark.coldstart
+def test_aot_warmup_compiles_and_persists(pipe):
+    engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    expected = len(engine.step_variants(('fp32',))) + 3  # + helpers
+    with tempfile.TemporaryDirectory() as d:
+        try:
+            info = engine.aot_warmup(precisions=('fp32',), cache_dir=d)
+            assert info['variants'] == expected
+            assert info['seconds'] > 0.0
+            assert cache_entries(d) > 0          # executables on disk
+        finally:
+            disable_persistent_cache()
+    # the AOT-warmed engine actually serves
+    engine.submit(GenerationRequest(request_id=0, seed=1, steps=2), now=0.0)
+    results = engine.run_until_idle(now=0.0)
+    assert [r.request_id for r in results] == [0]
+
+
+# ---------------------------------------------------------------------------
+# real process restart: cold populates, warm loads
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import json, os, sys
+os.environ['JAX_PLATFORMS'] = 'cpu'
+import jax
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.models.unet import UNetConfig
+from repro.serving import (ContinuousBatchingEngine, GenerationRequest,
+                           cache_entries)
+cfg = UNetConfig('tiny-cold', img_size=16, in_ch=3, base_ch=32,
+                 ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                 n_heads=4, timesteps=16)
+pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+warmup_s = engine.warmup(cache_dir=sys.argv[1])
+engine.submit(GenerationRequest(request_id=0, seed=1, steps=2), now=0.0)
+assert len(engine.run_until_idle(now=0.0)) == 1
+print(json.dumps({'warmup_s': warmup_s,
+                  'entries': cache_entries(sys.argv[1])}))
+"""
+
+
+def _restart(cache_dir):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), '..', 'src')
+    env['PYTHONPATH'] = os.path.abspath(src) + (
+        os.pathsep + env['PYTHONPATH'] if env.get('PYTHONPATH') else '')
+    env['JAX_PLATFORMS'] = 'cpu'
+    out = subprocess.run([sys.executable, '-c', _CHILD, cache_dir],
+                         env=env, capture_output=True, text=True,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.coldstart
+def test_cold_then_warm_restart_uses_persistent_cache():
+    """Two fresh processes share one cache dir: the cold run persists
+    every executable, the warm run adds none and warms up faster."""
+    with tempfile.TemporaryDirectory() as d:
+        cold = _restart(d)
+        assert cold['entries'] > 0, 'cold warmup persisted nothing'
+        warm = _restart(d)
+        assert warm['entries'] == cold['entries'], \
+            'warm restart recompiled (new cache entries appeared)'
+        assert warm['warmup_s'] < cold['warmup_s'], \
+            (f"warm warmup {warm['warmup_s']:.2f}s not faster than "
+             f"cold {cold['warmup_s']:.2f}s")

@@ -1,0 +1,196 @@
+"""Overload hardening tests: the bounded admission queue sheds instead
+of growing, deadline-aware shedding evicts the least-slack entry (and
+only then), expired requests are dropped at admission rather than ever
+occupying a denoising slot, and the engine's shed counters reconcile
+exactly with what a deterministic burst offered."""
+import math
+
+import jax
+import pytest
+
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.models.unet import UNetConfig
+from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
+                           GenerationRequest, offered_load,
+                           overload_factor)
+
+TINY = UNetConfig('tiny-overload', img_size=16, in_ch=3, base_ch=32,
+                  ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                  n_heads=4, timesteps=16)
+
+
+@pytest.fixture(scope='module')
+def pipe():
+    return DiffusionPipeline.init(jax.random.PRNGKey(0), TINY)
+
+
+def _req(i, **kw):
+    kw.setdefault('steps', 2)
+    return GenerationRequest(request_id=i, seed=100 + i, **kw)
+
+
+# ---------------------------------------------------------------------------
+# queue bound + shed accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.overload
+def test_bounded_queue_sheds_instead_of_growing():
+    q = AdmissionQueue(max_depth=3)
+    admitted = [q.submit(_req(i), now=float(i)) for i in range(5)]
+    assert admitted == [True, True, True, False, False]
+    assert len(q) == 3
+    assert q.rejected == 2 and q.shed == 2
+    assert q.submitted == 3
+    # the three that fit come out in FIFO order
+    assert [q.pop().request.request_id for _ in range(3)] == [0, 1, 2]
+
+
+@pytest.mark.overload
+def test_unbounded_queue_never_sheds():
+    q = AdmissionQueue()
+    for i in range(50):
+        assert q.submit(_req(i), now=0.0)
+    assert len(q) == 50 and q.shed == 0
+
+
+@pytest.mark.overload
+def test_unknown_shed_policy_rejected():
+    with pytest.raises(ValueError, match='shed_policy'):
+        AdmissionQueue(max_depth=2, shed_policy='drop-everything')
+
+
+@pytest.mark.overload
+def test_nonpositive_slo_rejected_at_request():
+    with pytest.raises(ValueError, match='slo_ms'):
+        _req(0, slo_ms=0.0)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware shedding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.overload
+def test_deadline_aware_evicts_least_slack_entry():
+    q = AdmissionQueue(max_depth=2, shed_policy='deadline-aware')
+    assert q.submit(_req(0, slo_ms=100.0), now=0.0)    # deadline 0.1
+    assert q.submit(_req(1, slo_ms=5000.0), now=0.0)   # deadline 5.0
+    # an arrival with more slack than the tightest entry displaces it
+    assert q.submit(_req(2, slo_ms=1000.0), now=0.0)   # deadline 1.0
+    assert q.evicted == 1 and len(q) == 2
+    ids = {q.pop().request.request_id, q.pop().request.request_id}
+    assert ids == {1, 2}                               # 0 was shed
+
+
+@pytest.mark.overload
+def test_deadline_aware_rejects_arrival_with_least_slack():
+    q = AdmissionQueue(max_depth=2, shed_policy='deadline-aware')
+    assert q.submit(_req(0, slo_ms=1000.0), now=0.0)
+    assert q.submit(_req(1, slo_ms=2000.0), now=0.0)
+    # tighter than everything queued: the arrival itself is shed
+    assert not q.submit(_req(2, slo_ms=10.0), now=0.0)
+    assert q.rejected == 1 and q.evicted == 0 and len(q) == 2
+
+
+@pytest.mark.overload
+def test_deadline_aware_never_evicts_slo_free_entries():
+    """No-SLO entries have an infinite deadline: an SLO-carrying arrival
+    can never displace them (eviction needs strictly more slack)."""
+    q = AdmissionQueue(max_depth=2, shed_policy='deadline-aware')
+    assert q.submit(_req(0), now=0.0)
+    assert q.submit(_req(1), now=0.0)
+    assert not q.submit(_req(2, slo_ms=60_000.0), now=0.0)
+    assert q.rejected == 1 and q.evicted == 0
+    assert all(q.pop().deadline == math.inf for _ in range(2))
+
+
+@pytest.mark.overload
+def test_expire_drops_dead_entries():
+    q = AdmissionQueue(shed_policy='deadline-aware')
+    q.submit(_req(0, slo_ms=100.0), now=0.0)           # deadline 0.1
+    q.submit(_req(1), now=0.0)                         # no SLO: immortal
+    assert q.expire(now=0.05) == []                    # still has slack
+    dead = q.expire(now=0.2)
+    assert [d.request.request_id for d in dead] == [0]
+    assert q.expired == 1 and len(q) == 1
+    # margin folds estimated service time into the cutoff: a request that
+    # WILL miss by completion is shed at admission too
+    q.submit(_req(2, slo_ms=100.0), now=1.0)           # deadline 1.1
+    assert [d.request.request_id
+            for d in q.expire(now=1.05, margin_s=0.1)] == [2]
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.overload
+def test_engine_shed_counters_match_deterministic_burst(pipe):
+    """6 requests burst into depth-3 queue: exactly 3 admitted, 3 shed
+    as queue_full, and completed + shed reconciles with the offer."""
+    engine = ContinuousBatchingEngine(
+        pipe, slots=2, quality_probe=0,
+        queue=AdmissionQueue(max_depth=3))
+    engine.warmup()
+    admitted = [engine.submit(_req(i), now=0.0) for i in range(6)]
+    assert admitted.count(True) == 3
+    results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+    s = engine.metrics.summary()
+    assert len(results) == 3
+    assert s['shed'] == 3.0
+    assert engine.metrics.shed_by_reason == {'queue_full': 3}
+    assert len(results) + int(s['shed']) == 6
+    assert s['max_queue_depth'] <= 3
+
+
+@pytest.mark.overload
+def test_expired_request_never_occupies_slot(pipe):
+    """A request whose deadline passes while queued is shed at admission
+    (reason 'expired') — it never reaches a slot, never produces a
+    result, and the engine still drains cleanly."""
+    engine = ContinuousBatchingEngine(
+        pipe, slots=1, quality_probe=0,
+        queue=AdmissionQueue(shed_policy='deadline-aware'))
+    engine.warmup()
+    assert engine.submit(_req(0, steps=3), now=0.0)            # heads a slot
+    assert engine.submit(_req(1, steps=3, slo_ms=1.0), now=0.0)  # dies queued
+    results = engine.run_until_idle(now=1.0, tick_dt=0.01)
+    assert [r.request_id for r in results] == [0]
+    assert engine.metrics.shed_by_reason == {'expired': 1}
+    assert engine.metrics.summary()['deadline_sheds'] == 1.0
+
+
+@pytest.mark.overload
+def test_queue_wait_percentiles_and_depth(pipe):
+    """Queue-wait percentiles come from completed requests' queue delay:
+    ordered, non-negative, and the peak depth reflects the burst."""
+    engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    engine.warmup()
+    for i in range(5):
+        assert engine.submit(_req(i), now=0.0)
+    results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+    assert len(results) == 5
+    s = engine.metrics.summary()
+    assert 0.0 <= s['p50_queue_wait_ms'] <= s['p99_queue_wait_ms']
+    assert s['max_queue_depth'] >= 3          # 5 arrivals, 2 slots
+
+
+# ---------------------------------------------------------------------------
+# load model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.smoke
+@pytest.mark.overload
+def test_overload_factor_little_law():
+    # 10 req/s x 10 steps x 50 ms = 5 in flight; 1 slot -> 5x overload
+    assert offered_load(10.0, 0.05, 10) == pytest.approx(5.0)
+    assert overload_factor(10.0, 0.05, 10, slots=1) == pytest.approx(5.0)
+    assert overload_factor(10.0, 0.05, 10, slots=5) == pytest.approx(1.0)
+    # per-precision mappings add (shared slot buffer)
+    load = offered_load({'fp32': 1.0, 'w8a8': 4.0},
+                        {'fp32': 0.1, 'w8a8': 0.025}, 10)
+    assert load == pytest.approx(1.0 * 10 * 0.1 + 4.0 * 10 * 0.025)
+    with pytest.raises(ValueError):
+        overload_factor(1.0, 0.1, 10, slots=0)
