@@ -28,8 +28,14 @@ unit is the physical/logical unit string):
   * overload  — a 5x-overload Poisson trace against a bounded
                 deadline-aware queue: shed rate by cause, p99 queue wait,
                 peak queue depth (the survival proof)
+  * sharded_serving — the slot-sharded engine at 1/2/4/8 simulated
+                devices: device-parallel requests/s modeled from
+                measured per-device tick times (the host simulation
+                serializes devices, so wall clock is emitted separately
+                as the audit trail), plus decode overlap on/off at 8
+                devices and a zero-recompile check
 
-Rows persist to ``BENCH_PR8.json`` at the repo root.  Older
+Rows persist to ``BENCH_PR9.json`` at the repo root.  Older
 ``BENCH_PR*.json`` files used ``{name, us_per_call, derived}`` rows;
 ``load_bench`` reads both shapes.
 
@@ -467,6 +473,120 @@ def bench_coldstart(emit):
     emit('coldstart/cache_entries', int(cold['cache_entries']), 'files')
 
 
+# child of bench_sharded_serving: one process with 8 simulated host
+# devices sweeps slot-sharded engines over 1/2/4/8-device meshes on a
+# fixed request batch, counting scheduler ticks and wall time, and
+# anchors the device-parallel model with the 1-device engine's measured
+# tick time.  Reports JSON on stdout.
+_SHARDED_CHILD = r"""
+import json, os, sys, time
+os.environ['JAX_PLATFORMS'] = 'cpu'
+import jax
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.launch.mesh import serving_mesh
+from repro.models.unet import UNetConfig
+from repro.serving import ContinuousBatchingEngine, GenerationRequest
+
+cfg = UNetConfig('bench-sharded', img_size=16, in_ch=3, base_ch=32,
+                 ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                 n_heads=4, timesteps=50)
+pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+N, SPD, STEPS = 32, 2, 6
+
+def run(n_dev, overlap=None, measure=False):
+    e = ContinuousBatchingEngine(pipe, slots_per_device=SPD,
+                                 mesh=serving_mesh(n_dev), quality_probe=0,
+                                 overlap_decode=overlap)
+    e.warmup()
+    stats0 = e.compile_stats()
+    for i in range(N):
+        e.submit(GenerationRequest(request_id=i, seed=700 + i, steps=STEPS,
+                                   exit_tol=0.0), now=0.0)
+    out, ticks = [], 0
+    t0 = time.perf_counter()
+    while e.busy:
+        out.extend(e.tick(now=0.0))
+        ticks += 1
+    wall = time.perf_counter() - t0
+    assert len(out) == N, f'{n_dev}dev: {len(out)}/{N} completed'
+    assert e.compile_stats() == stats0, f'{n_dev}dev recompiled mid-serve'
+    r = {'slots': e.slots, 'ticks': ticks, 'wall_s': wall,
+         'overlapped': e.metrics.overlapped_decodes}
+    if measure:
+        r['tick_s'] = e.measure_tick_s(steps=16)
+    return r
+
+report = {'n_devices': jax.device_count(), 'n_requests': N, 'runs': {}}
+for n in (1, 2, 4, 8):
+    report['runs'][str(n)] = run(n, measure=(n == 1))
+report['overlap_on'] = run(8, overlap=True)
+report['overlap_off'] = run(8, overlap=False)
+print('REPORT ' + json.dumps(report))
+"""
+
+
+def _sharded_child():
+    env = dict(os.environ)
+    env['PYTHONPATH'] = os.path.join(ROOT, 'src') + (
+        os.pathsep + env['PYTHONPATH'] if env.get('PYTHONPATH') else '')
+    env['JAX_PLATFORMS'] = 'cpu'
+    env['XLA_FLAGS'] = (env.get('XLA_FLAGS', '')
+                        + ' --xla_force_host_platform_device_count=8').strip()
+    out = subprocess.run([sys.executable, '-c', _SHARDED_CHILD],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f'sharded child failed:\n{out.stderr[-2000:]}')
+    lines = [l for l in out.stdout.splitlines() if l.startswith('REPORT ')]
+    if not lines:
+        raise RuntimeError(f'sharded child printed no report:\n{out.stdout}')
+    return json.loads(lines[-1][len('REPORT '):])
+
+
+def bench_sharded_serving(emit):
+    """Slot-sharded serving throughput at 1/2/4/8 devices, plus decode
+    overlap on/off at 8 devices.
+
+    The mesh is simulated on the host
+    (``--xla_force_host_platform_device_count=8``), which SERIALIZES the
+    per-device programs on one CPU — simulation wall clock cannot show
+    device parallelism.  Slot sharding keeps the per-device program
+    identical at every mesh size (same per-device batch, same kernels),
+    so one tick of an N-device mesh takes one 1-device tick of wall
+    time on real hardware; device-parallel throughput is therefore
+    modeled as ``requests / (ticks * measured 1-device tick time)`` —
+    the same measured-tick model the overload section uses for capacity.
+    The serialized simulation wall rates are also emitted so the model
+    is auditable against what actually ran."""
+    rep = _sharded_child()
+    assert rep['n_devices'] == 8, 'host device simulation failed'
+    n_req = rep['n_requests']
+    tick1 = rep['runs']['1']['tick_s']
+    modeled = {}
+    for n in (1, 2, 4, 8):
+        r = rep['runs'][str(n)]
+        modeled[n] = n_req / (r['ticks'] * tick1)
+        emit(f'sharded_serving/rps_{n}dev', round(modeled[n], 2), 'req/s')
+    speedup = modeled[8] / modeled[1]
+    assert speedup > 1.5, f'8-device speedup {speedup:.2f}x <= 1.5x'
+    emit('sharded_serving/speedup_8v1', round(speedup, 2), 'x')
+    emit('sharded_serving/slots_8dev', rep['runs']['8']['slots'], 'slots')
+    emit('sharded_serving/ticks_1dev', rep['runs']['1']['ticks'], 'ticks')
+    emit('sharded_serving/ticks_8dev', rep['runs']['8']['ticks'], 'ticks')
+    emit('sharded_serving/sim_wall_rps_1dev',
+         round(n_req / rep['runs']['1']['wall_s'], 2), 'req/s')
+    emit('sharded_serving/sim_wall_rps_8dev',
+         round(n_req / rep['runs']['8']['wall_s'], 2), 'req/s')
+    on, off = rep['overlap_on'], rep['overlap_off']
+    assert on['overlapped'] > 0, 'decode overlap never engaged'
+    emit('sharded_serving/overlap_on_rps',
+         round(n_req / on['wall_s'], 2), 'req/s')
+    emit('sharded_serving/overlap_off_rps',
+         round(n_req / off['wall_s'], 2), 'req/s')
+    emit('sharded_serving/overlapped_decodes', on['overlapped'], 'decodes')
+    emit('sharded_serving/zero_recompiles', 1, 'bool')
+
+
 def bench_overload(emit):
     """Survival under 5x overload: a Poisson trace offering five times
     the engine's measured service capacity hits a bounded deadline-aware
@@ -531,10 +651,11 @@ SECTIONS = {
     'cache_serving': bench_cache_serving,
     'coldstart': bench_coldstart,
     'overload': bench_overload,
+    'sharded_serving': bench_sharded_serving,
 }
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
-BENCH_JSON = os.path.join(ROOT, 'BENCH_PR8.json')
+BENCH_JSON = os.path.join(ROOT, 'BENCH_PR9.json')
 
 
 def load_bench(path):

@@ -11,8 +11,10 @@
 #      scheduler's fast checks (DeepCache-phased slots, early exit)
 #   5. hardening lane (-m "overload or coldstart"): bounded-queue
 #      shedding, deadline expiry, persistent compilation cache, restart
-#   6. full tier-1 suite
-#   7. bench regression gate: serving/engine_rps must stay within
+#   6. dist serving lane (-m dist_serving): the slot-sharded engine on
+#      an 8-device simulated mesh (parity, elastic resize, overlap)
+#   7. full tier-1 suite
+#   8. bench regression gate: serving/engine_rps must stay within
 #      BENCH_TOL (default 10%) of the newest committed BENCH_PR*.json
 #
 # CI_SMOKE_ONLY=1 stops after stage 2 (pre-push hook scale).
@@ -22,10 +24,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/scripts/ci_stubs:$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 
-echo '== [1/7] collection (hypothesis absent) =='
+echo '== [1/8] collection (hypothesis absent) =='
 python -m pytest -q --collect-only >/dev/null
 
-echo '== [2/7] smoke lane =='
+echo '== [2/8] smoke lane =='
 python -m pytest -q -m smoke
 
 if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
@@ -33,17 +35,20 @@ if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
     exit 0
 fi
 
-echo '== [3/7] quant serving lane =='
+echo '== [3/8] quant serving lane =='
 python -m pytest -q -m quant
 
-echo '== [4/7] sched lane =='
+echo '== [4/8] sched lane =='
 python -m pytest -q -m "sched and smoke"
 
-echo '== [5/7] hardening lane (overload + coldstart) =='
+echo '== [5/8] hardening lane (overload + coldstart) =='
 python -m pytest -q -m "overload or coldstart"
 
-echo '== [6/7] full tier-1 =='
+echo '== [6/8] dist serving lane (8-device simulated mesh) =='
+python -m pytest -q -m dist_serving
+
+echo '== [7/8] full tier-1 =='
 python -m pytest -q
 
-echo '== [7/7] bench regression gate =='
+echo '== [8/8] bench regression gate =='
 python benchmarks/run.py serving --check

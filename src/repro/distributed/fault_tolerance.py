@@ -91,6 +91,24 @@ class PreemptionHandler:
             signal.signal(sig, prev)
 
 
+def elastic_serving_plan(n_healthy_devices: int, slots_per_device: int = 1
+                         ) -> Tuple[Tuple[int, ...], Tuple[str, ...], int]:
+    """Serving-side elastic plan: the slot-sharded engine's mesh is 1-D
+    (every device is a slot shard on the ``data`` axis), so the largest
+    mesh over the healthy devices is simply all of them.  Returns
+    ``(mesh_shape, axis_names, slots)`` where ``slots`` keeps the
+    per-device slot budget constant — dropping devices shrinks the slot
+    buffer instead of overloading the survivors, rejoining devices grow
+    it back.  The engine re-places in-flight latents into the resized
+    buffer and parks any overflow, so a resize never kills a request."""
+    if n_healthy_devices < 1:
+        raise ValueError('not enough devices for one slot shard')
+    if slots_per_device < 1:
+        raise ValueError('slots_per_device must be >= 1')
+    return ((n_healthy_devices,), ('data',),
+            n_healthy_devices * slots_per_device)
+
+
 def elastic_plan(n_healthy_hosts: int, model_parallel: int = 16
                  ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
     """Largest (pod, data, model) mesh that fits the healthy hosts

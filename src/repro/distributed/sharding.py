@@ -190,23 +190,49 @@ def cache_pspecs(cache: Any, mesh: Mesh, batch: int,
     return jax.tree_util.tree_map_with_path(spec_for, cache)
 
 
-def shard_hint(x, *spec):
+def current_mesh() -> Optional[Mesh]:
+    """The ambient mesh, or None outside any mesh context.
+
+    Tries, in order: the explicit-sharding abstract mesh (newer JAX),
+    the legacy ``with mesh:`` thread-resource env via the public
+    ``jax.interpreters.pxla`` spelling, and finally the private
+    ``jax._src.mesh`` module (version-guarded last resort).  Each probe
+    is guarded separately so a missing API on one JAX release never
+    hides a context visible through another — the failure mode that
+    silently turned ``shard_hint`` into a no-op."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and mesh.axis_names:
+            return mesh
+    except AttributeError:
+        pass
+    try:
+        from jax.interpreters import pxla
+        phys = pxla.thread_resources.env.physical_mesh
+        if phys.axis_names:
+            return phys
+    except (ImportError, AttributeError):
+        pass
+    try:                                       # pragma: no cover
+        from jax._src import mesh as _mesh_lib
+        phys = _mesh_lib.thread_resources.env.physical_mesh
+        if phys.axis_names:
+            return phys
+    except Exception:
+        pass
+    return None
+
+
+def shard_hint(x, *spec, mesh: Optional[Mesh] = None):
     """``with_sharding_constraint`` that degrades gracefully: outside a mesh
     context (CPU smoke tests) it is the identity; axes that are absent from
     the mesh or don't divide the dim are dropped.  ``spec`` entries may be
     axis names, tuples of axis names, or the sentinel ``'dp'`` (all
-    data-parallel axes present in the mesh)."""
-    mesh = None
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or not mesh.axis_names:
-            # `with mesh:` (legacy context) is invisible to the abstract
-            # mesh; read the thread-resource env instead.
-            from jax._src import mesh as _mesh_lib
-            phys = _mesh_lib.thread_resources.env.physical_mesh
-            mesh = phys if phys.axis_names else None
-    except Exception:
-        mesh = None
+    data-parallel axes present in the mesh).  ``mesh`` pins the mesh
+    explicitly (the sharded serving engine passes its own); by default the
+    ambient context is discovered via ``current_mesh``."""
+    if mesh is None:
+        mesh = current_mesh()
     if mesh is None or not mesh.axis_names:
         return x
     names = set(mesh.axis_names)
@@ -231,7 +257,10 @@ def shard_hint(x, *spec):
         else:
             out.append(None)
     out += [None] * (x.ndim - len(out))
-    return jax.lax.with_sharding_constraint(x, P(*out))
+    # a concrete NamedSharding, not a bare PartitionSpec: the constraint
+    # then works outside any `with mesh:` context (the sharded serving
+    # engine passes its mesh explicitly from plain eager code)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
 
 
 def named(mesh: Mesh, pspecs: Any) -> Any:

@@ -28,6 +28,23 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
+def serving_mesh(n_devices: Optional[int] = None,
+                 devices=None) -> Mesh:
+    """1-D ``('data',)`` mesh for the slot-sharded serving engine.
+
+    ``n_devices=None`` takes every visible device; an explicit count
+    takes the first N (the elastic-resize path passes the surviving
+    device list instead).  Tests get 8 CPU "devices" from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devs):
+            raise ValueError(f'need 1..{len(devs)} devices, '
+                             f'got {n_devices}')
+        devs = devs[:n_devices]
+    return Mesh(np.asarray(devs), ('data',))
+
+
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     """The data-parallel axes of a mesh: ('pod','data') when a pod axis
     exists, else ('data',)."""

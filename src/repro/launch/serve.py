@@ -34,6 +34,21 @@ p50/p99 queue waits are reported:
     PYTHONPATH=src python -m repro.launch.serve --diffusion \
         --overload 5 --requests 32 --slots 4 --steps 6 \
         --cache-dir /tmp/repro-xla-cache
+
+Sharded multi-device serving: ``--devices N`` builds a 1-D ``('data',)``
+mesh over the first N visible devices and shards the engine's slot axis
+across it (``--slots-per-device`` fixes the per-device budget; decode
+overlap is on by default, ``--overlap-decode off`` disables it).
+``--resize-to M --resize-after K`` triggers an elastic resize to M
+devices after K completions, mid-replay — the drop-and-survive demo.
+``--cache-max-mb`` bounds the persistent compilation cache with LRU
+eviction.  Simulate a mesh on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --diffusion \
+        --devices 8 --slots-per-device 1 --requests 16 --rate 8 \
+        --steps 6 --resize-to 4 --resize-after 4
 """
 from __future__ import annotations
 
@@ -103,7 +118,9 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                     cache_interval: int = 1, exit_tol=None,
                     exit_patience: int = 2, cache_dir=None,
                     queue_depth=None, shed_policy: str = 'reject-newest',
-                    overload: float = 0.0):
+                    overload: float = 0.0, devices=None,
+                    slots_per_device=None, overlap_decode=None,
+                    resize_to=None, resize_after=None, cache_max_mb=None):
     """Replay a Poisson arrival trace through the continuous-batching
     engine and print the serving + energy report, plus the per-policy
     accuracy-vs-EPB frontier.  ``cache_interval > 1`` enables
@@ -117,11 +134,16 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     the engine's measured service capacity, with a bounded queue
     (``queue_depth``, default ``2 * slots``) and deadline-aware
     shedding proving the engine survives instead of growing its backlog
-    without bound."""
+    without bound.
+
+    ``devices`` shards the slot axis over a 1-D mesh of the first N
+    visible devices; ``resize_to``/``resize_after`` demo the elastic
+    path by resizing the mesh mid-replay after K completions."""
     from repro.diffusion.pipeline import DiffusionPipeline
     from repro.models.unet import UNetConfig
     from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
-                               cache_entries, overload_factor)
+                               cache_entries, enable_persistent_cache,
+                               overload_factor)
 
     cfg = UNetConfig('serve-diffusion', img_size=img, in_ch=3, base_ch=64,
                      ch_mults=(1, 2), n_res_blocks=1,
@@ -134,11 +156,28 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     if queue_depth is not None or shed_policy != 'reject-newest':
         queue = AdmissionQueue(max_depth=queue_depth,
                                shed_policy=shed_policy)
+    mesh = None
+    if devices is not None:
+        from repro.launch.mesh import serving_mesh
+        mesh = serving_mesh(n_devices=devices)
     engine = ContinuousBatchingEngine(pipe, slots=slots, queue=queue,
                                       quality_probe=quality_probe,
                                       cache_interval=cache_interval,
                                       exit_tol=exit_tol,
-                                      exit_patience=exit_patience)
+                                      exit_patience=exit_patience,
+                                      mesh=mesh,
+                                      slots_per_device=slots_per_device,
+                                      overlap_decode=overlap_decode)
+    if mesh is not None:
+        print(f'[mesh] slot axis sharded over {devices} devices: '
+              f'{engine.slots} slots '
+              f'({engine.slots // devices}/device), '
+              f'overlap_decode={engine.overlap_decode}', flush=True)
+    if cache_dir and cache_max_mb is not None:
+        # enable with the size bound BEFORE warmup re-enables it (the
+        # bound is process state the engine's trim_cache calls enforce)
+        enable_persistent_cache(cache_dir,
+                                max_bytes=int(cache_max_mb * 2 ** 20))
     entries_before = cache_entries(cache_dir) if cache_dir else 0
     print(f'[serve] warmup (compile, policy={precision}'
           + (f', cache_dir={cache_dir}' if cache_dir else '') + ')...',
@@ -173,11 +212,34 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     if exit_tol is not None and exit_tol > 0:
         sched.append(f'exit_tol={exit_tol:g} patience={exit_patience}')
     print(f'[serve] replaying {n_requests} requests at {rate_hz:.1f} req/s '
-          f'({slots} slots, {steps} DDIM steps, precision={precision}'
+          f'({engine.slots} slots, {steps} DDIM steps, precision={precision}'
           + (', ' + ', '.join(sched) if sched else '') + ')', flush=True)
+    resize_state = {'done': 0, 'fired': False, 'flushed': []}
+
+    def _on_result(res):
+        resize_state['done'] += 1
+        k = resize_after if resize_after is not None else n_requests // 2
+        if (resize_to is not None and not resize_state['fired']
+                and resize_state['done'] >= k):
+            resize_state['fired'] = True
+            print(f'[elastic] {resize_state["done"]} done -> resizing '
+                  f'{devices} -> {resize_to} devices mid-replay', flush=True)
+            resize_state['flushed'].extend(engine.elastic_resize(
+                n_devices=resize_to, precisions=(precision,)))
+            print(f'[elastic] rebuilt: {engine.slots} slots on '
+                  f'{resize_to} devices, {len(engine._parked)} parked',
+                  flush=True)
+
     t0 = time.perf_counter()
-    results = engine.replay(trace)
+    results = engine.replay(
+        trace, on_result=_on_result if resize_to is not None else None)
+    results.extend(resize_state['flushed'])
     makespan = time.perf_counter() - t0
+    if engine.monitor is not None:
+        report = engine.monitor.check()
+        print('[mesh] stragglers: '
+              + (report.recommendation if report else 'none detected'),
+              flush=True)
     s = engine.metrics.summary()
     print(f'[serve] {len(results)} done in {makespan:.2f}s '
           f'({s["requests_per_s"]:.2f} req/s) '
@@ -275,6 +337,27 @@ def main():
                          'capacity (ignores --rate; bounds the queue and '
                          'enables deadline-aware shedding). 5 = the '
                          'survival trace')
+    ap.add_argument('--devices', type=int, default=None,
+                    help='shard the slot axis over a 1-D mesh of the '
+                         'first N visible devices (simulate with '
+                         'XLA_FLAGS=--xla_force_host_platform_device_'
+                         'count=N)')
+    ap.add_argument('--slots-per-device', type=int, default=None,
+                    help='per-device slot budget on the mesh (overrides '
+                         '--slots; the invariant elastic resizes keep)')
+    ap.add_argument('--overlap-decode', default='auto',
+                    choices=['auto', 'on', 'off'],
+                    help='pipeline drained requests\' VAE decodes behind '
+                         'the next denoise tick (auto: on when sharded)')
+    ap.add_argument('--resize-to', type=int, default=None,
+                    help='elastic-resize the mesh to this many devices '
+                         'mid-replay (the drop/rejoin survival demo)')
+    ap.add_argument('--resize-after', type=int, default=None,
+                    help='completions before the mid-replay resize '
+                         '(default: half the requests)')
+    ap.add_argument('--cache-max-mb', type=float, default=None,
+                    help='bound the persistent compilation cache; '
+                         'least-recently-used executables are evicted')
     args = ap.parse_args()
     if args.diffusion:
         precision = args.precision or ('w8a8' if args.w8a8 else 'fp32')
@@ -287,7 +370,14 @@ def main():
                         cache_dir=args.cache_dir,
                         queue_depth=args.queue_depth,
                         shed_policy=args.shed_policy,
-                        overload=args.overload)
+                        overload=args.overload,
+                        devices=args.devices,
+                        slots_per_device=args.slots_per_device,
+                        overlap_decode=None if args.overlap_decode == 'auto'
+                        else args.overlap_decode == 'on',
+                        resize_to=args.resize_to,
+                        resize_after=args.resize_after,
+                        cache_max_mb=args.cache_max_mb)
         return
     cfg = smoke_config(args.arch) if args.preset == 'smoke' \
         else get(args.arch)

@@ -21,13 +21,15 @@ baseline — together they form the frontier in every metrics snapshot.
 """
 from repro.core.precision import PrecisionPolicy
 from repro.serving.api import GenerationRequest, GenerationResult
-from repro.serving.batcher import (Bucket, BucketRouter, bucket_for,
-                                   choose_slots, group_by_precision,
-                                   offered_load, overload_factor,
-                                   split_cache_phase)
+from repro.serving.batcher import (Bucket, BucketRouter, align_slots,
+                                   bucket_for, choose_slots,
+                                   group_by_precision, offered_load,
+                                   overload_factor, split_cache_phase)
 from repro.serving.compile_cache import (active_cache_dir, cache_entries,
+                                         cache_evictions,
                                          disable_persistent_cache,
-                                         enable_persistent_cache)
+                                         enable_persistent_cache,
+                                         trim_cache)
 from repro.serving.engine import ContinuousBatchingEngine
 from repro.serving.metrics import (FrontierPoint, PhotonicAccountant,
                                    ServingMetrics)
@@ -37,9 +39,9 @@ __all__ = [
     'GenerationRequest', 'GenerationResult', 'ContinuousBatchingEngine',
     'AdmissionQueue', 'SHED_POLICIES', 'ServingMetrics',
     'PhotonicAccountant', 'PrecisionPolicy', 'FrontierPoint',
-    'Bucket', 'BucketRouter', 'bucket_for', 'choose_slots',
+    'Bucket', 'BucketRouter', 'bucket_for', 'align_slots', 'choose_slots',
     'group_by_precision', 'offered_load', 'overload_factor',
     'split_cache_phase',
     'enable_persistent_cache', 'disable_persistent_cache',
-    'active_cache_dir', 'cache_entries',
+    'active_cache_dir', 'cache_entries', 'cache_evictions', 'trim_cache',
 ]

@@ -74,6 +74,18 @@ def split_cache_phase(mask: np.ndarray,
     return mask & needs_refresh, mask & ~needs_refresh
 
 
+def align_slots(slots: int, n_shards: int) -> int:
+    """Round a slot count up to a multiple of the mesh's slot-axis shard
+    count, so the engine's ``(slots, H, W, C)`` latent buffer divides
+    evenly over the ``data`` axis (every device carries the same number
+    of slot rows)."""
+    if slots < 1:
+        raise ValueError('need at least one slot')
+    if n_shards < 1:
+        raise ValueError('need at least one slot shard')
+    return ((slots + n_shards - 1) // n_shards) * n_shards
+
+
 def _per_precision(value, key):
     return value[key] if isinstance(value, Mapping) else value
 
@@ -105,7 +117,8 @@ def overload_factor(arrival_rate_hz, step_time_s, mean_steps,
 
 
 def choose_slots(arrival_rate_hz, step_time_s, mean_steps,
-                 target_util: float = 0.8, max_slots: int = 64) -> int:
+                 target_util: float = 0.8, max_slots: int = 64,
+                 n_shards: int = 1) -> int:
     """Little's law slot sizing: L = lambda x W, W ~ steps x step_time.
 
     Each load term may be a scalar or a per-precision mapping (e.g.
@@ -113,11 +126,14 @@ def choose_slots(arrival_rate_hz, step_time_s, mean_steps,
     step times); precisions share one slot buffer, so their expected
     in-flight counts add.  Returns the slot count that keeps expected
     occupancy at ``target_util`` of the buffer, clamped to [1, max_slots].
+    ``n_shards`` (the mesh's ``data``-axis size for a slot-sharded
+    engine) rounds the result up so the buffer divides evenly.
     """
     in_flight = offered_load(arrival_rate_hz, step_time_s, mean_steps)
     if in_flight <= 0:
-        return 1
-    return max(1, min(max_slots, math.ceil(in_flight / target_util)))
+        return align_slots(1, n_shards)
+    slots = max(1, min(max_slots, math.ceil(in_flight / target_util)))
+    return align_slots(slots, n_shards)
 
 
 class BucketRouter:

@@ -35,6 +35,15 @@ import jax
 #: process, or None when the persistent cache is off.
 _ACTIVE_DIR: Optional[str] = None
 
+#: Size bound (bytes) applied to the active directory, or None for
+#: unbounded.  Enforced by ``trim_cache`` (LRU eviction), which the
+#: engine calls after every warmup that populates the cache.
+_MAX_BYTES: Optional[int] = None
+
+#: Executables evicted by the size bound in this process — surfaced via
+#: ``cache_entries(..., with_evictions=True)``.
+_EVICTED = 0
+
 #: Optional config flags applied best-effort (names vary across JAX
 #: releases; absence is not an error).
 _OPTIONAL_FLAGS = (
@@ -45,7 +54,8 @@ _OPTIONAL_FLAGS = (
 
 def enable_persistent_cache(cache_dir: str,
                             min_entry_size_bytes: int = -1,
-                            min_compile_time_secs: float = 0.0) -> str:
+                            min_compile_time_secs: float = 0.0,
+                            max_bytes: Optional[int] = None) -> str:
     """Route every XLA compilation through a persistent on-disk cache.
 
     Creates ``cache_dir`` if needed and returns its absolute path.
@@ -53,10 +63,16 @@ def enable_persistent_cache(cache_dir: str,
     every executable regardless of size or compile time (JAX's defaults
     skip sub-second compiles, which covers every CPU-scale demo model).
     Idempotent: re-enabling with the same directory is a no-op.
+
+    ``max_bytes`` bounds the directory: a long-lived serving fleet
+    accretes one executable per (model, mesh, step-variant) forever, so
+    without a bound the cache dir grows without limit.  The bound is
+    enforced now and after every engine warmup (``trim_cache``), evicting
+    least-recently-used entries first.
     """
     cache_dir = os.path.abspath(os.path.expanduser(cache_dir))
     os.makedirs(cache_dir, exist_ok=True)
-    global _ACTIVE_DIR
+    global _ACTIVE_DIR, _MAX_BYTES
     try:
         jax.config.update('jax_compilation_cache_dir', cache_dir)
         jax.config.update('jax_persistent_cache_min_entry_size_bytes',
@@ -74,7 +90,14 @@ def enable_persistent_cache(cache_dir: str,
         except (AttributeError, ValueError):       # pragma: no cover
             pass
     _reset_cache_state()
+    if max_bytes is None and cache_dir == _ACTIVE_DIR:
+        # idempotent re-enable (e.g. engine.warmup after an explicit
+        # enable with a bound): keep the configured bound
+        max_bytes = _MAX_BYTES
     _ACTIVE_DIR = cache_dir
+    _MAX_BYTES = max_bytes
+    if max_bytes is not None:
+        trim_cache(cache_dir, max_bytes)
     return cache_dir
 
 
@@ -95,13 +118,65 @@ def _reset_cache_state() -> None:
 def disable_persistent_cache() -> None:
     """Turn the persistent cache off for subsequent compilations (tests
     use this to avoid leaking a temporary directory into later work)."""
-    global _ACTIVE_DIR
+    global _ACTIVE_DIR, _MAX_BYTES
     try:
         jax.config.update('jax_compilation_cache_dir', None)
     except AttributeError:                         # pragma: no cover
         pass
     _reset_cache_state()
     _ACTIVE_DIR = None
+    _MAX_BYTES = None
+
+
+def _entry_files(d: str):
+    """(path, size, last_use) for every cache entry.  Last use is
+    ``max(atime, mtime)``: reads bump atime where the filesystem tracks
+    it, and mtime covers ``noatime`` mounts (creation order then stands
+    in for recency — still the right eviction order for a write-once
+    cache)."""
+    out = []
+    for name in os.listdir(d):
+        path = os.path.join(d, name)
+        if not os.path.isfile(path):
+            continue
+        st = os.stat(path)
+        out.append((path, st.st_size, max(st.st_atime, st.st_mtime)))
+    return out
+
+
+def trim_cache(cache_dir: Optional[str] = None,
+               max_bytes: Optional[int] = None) -> int:
+    """Enforce the size bound on ``cache_dir`` (default: the active
+    directory and its configured bound): evict least-recently-used
+    executables until the directory fits.  Returns the number of
+    entries evicted (also accumulated into the process-wide eviction
+    counter).  A no-op when no bound is configured."""
+    global _EVICTED
+    d = cache_dir or _ACTIVE_DIR
+    budget = max_bytes if max_bytes is not None else _MAX_BYTES
+    if d is None or budget is None or not os.path.isdir(d):
+        return 0
+    files = _entry_files(d)
+    total = sum(size for _, size, _ in files)
+    if total <= budget:
+        return 0
+    evicted = 0
+    for path, size, _ in sorted(files, key=lambda f: f[2]):
+        if total <= budget:
+            break
+        try:
+            os.remove(path)
+        except OSError:                            # pragma: no cover
+            continue                # concurrent reader won the race
+        total -= size
+        evicted += 1
+    _EVICTED += evicted
+    return evicted
+
+
+def cache_evictions() -> int:
+    """Executables evicted by the size bound in this process."""
+    return _EVICTED
 
 
 def active_cache_dir() -> Optional[str]:
@@ -109,12 +184,17 @@ def active_cache_dir() -> Optional[str]:
     return _ACTIVE_DIR
 
 
-def cache_entries(cache_dir: Optional[str] = None) -> int:
+def cache_entries(cache_dir: Optional[str] = None,
+                  with_evictions: bool = False):
     """Number of persisted executables in ``cache_dir`` (default: the
     active directory).  0 when the cache is off or the directory is
-    empty — a cold/warm probe compares this before and after warmup."""
+    empty — a cold/warm probe compares this before and after warmup.
+    ``with_evictions=True`` returns ``(entries, evicted)`` so callers
+    can tell an empty-because-cold directory from one the size bound
+    has been evicting from."""
     d = cache_dir or _ACTIVE_DIR
-    if d is None or not os.path.isdir(d):
-        return 0
-    return sum(1 for name in os.listdir(d)
-               if os.path.isfile(os.path.join(d, name)))
+    n = 0
+    if d is not None and os.path.isdir(d):
+        n = sum(1 for name in os.listdir(d)
+                if os.path.isfile(os.path.join(d, name)))
+    return (n, _EVICTED) if with_evictions else n

@@ -71,6 +71,39 @@ Cold-start and overload hardening:
     occupies a slot.  Sheds are tallied by cause in the metrics, along
     with p50/p99 queue wait and the peak queue depth.
 
+Sharded multi-device serving (``mesh=...``): the slot axis shards over
+the mesh's ``data`` axis, so ONE engine spans an N-device mesh with each
+device carrying ``slots / N`` slot rows of the latent / x0 / DeepCache
+buffers.  Every step variant is jitted with sharded ``out_shardings``
+(donated buffers stay resident and partitioned across ticks) and pins
+its layout with ``distributed.sharding.shard_hint``; ``_place`` /
+``_take`` move single samples in and out of the sharded buffers without
+ever materializing the whole buffer on one device.  The slot axis is
+pure data parallelism — the UNet treats batch rows independently — so a
+request served on the mesh is bitwise identical to the single-device
+engine.  Three things ride on top:
+
+  * **Decode overlap** (``overlap_decode``, default on when sharded):
+    draining a finished slot *dispatches* the VAE decode asynchronously
+    and frees the slot immediately; the image materializes only after
+    the NEXT denoise tick has been launched, so decode runs behind the
+    following step instead of serializing with it.  Results surface one
+    tick later (a final flush covers the last tick); the metrics count
+    ``overlapped_decodes``.
+  * **Elastic resize** (``elastic_resize``): when devices drop or
+    rejoin, ``distributed.fault_tolerance.elastic_serving_plan`` sizes
+    the new 1-D mesh and the engine rebuilds its slot buffer on it at a
+    constant per-device slot budget, re-placing in-flight latents and
+    *parking* any overflow on the host (parked requests re-enter slots
+    as they free, ahead of the queue, with a forced cache refresh).
+    Step variants are re-lowered for the new topology — ``aot_warmup``
+    pre-compiles them without serving a tick — and a ``StepMonitor``
+    (``engine.monitor``) keeps per-device tick timings so a deployment
+    can trigger the resize from straggler reports.
+  * **AOT warmup / persistent cache** carry through: the pre-lowered
+    shapes are tagged with the mesh sharding, so the executables a
+    sharded engine persists are the ones it serves with.
+
 Output equivalence: with eta=0 DDIM is deterministic given the initial
 noise, and both the UNet and the per-row w8a8 activation scales treat
 batch elements independently, so a request served through the engine —
@@ -90,14 +123,20 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as PSpec
 
 from repro.core.precision import PrecisionPolicy
 from repro.diffusion import samplers
 from repro.diffusion.deepcache import unet_apply_cached
 from repro.diffusion.pipeline import DiffusionPipeline
+from repro.distributed.fault_tolerance import (StepMonitor,
+                                               elastic_serving_plan)
+from repro.distributed.sharding import named, shard_hint
 from repro.models import autoencoder as AE
 from repro.serving.api import GenerationRequest, GenerationResult
-from repro.serving.batcher import group_by_precision, split_cache_phase
+from repro.serving.batcher import (align_slots, group_by_precision,
+                                   split_cache_phase)
+from repro.serving.compile_cache import trim_cache
 from repro.serving.metrics import PhotonicAccountant, ServingMetrics
 from repro.serving.queue import AdmissionQueue, Queued
 
@@ -117,6 +156,21 @@ class _Active:
     full_evals: int = 0          # full-UNet ticks consumed so far
     cached_evals: int = 0        # shallow (skip) ticks consumed so far
     exit_streak: int = 0         # consecutive ticks under exit_tol
+    force_refresh: bool = False  # next tick must be a full pass (set when
+    #                              a parked slot re-enters: its DeepCache
+    #                              feature rows did not survive the resize)
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A drained slot whose VAE decode has been dispatched but not
+    materialized: under decode overlap the image syncs only after the
+    NEXT tick's UNet step is in flight (``_finish_drain``)."""
+    active: _Active
+    z: 'jax.Array'               # decoded (or raw-latent) batch-1 array
+    now: float
+    wall_clock: bool
+    early: bool
 
 
 class ContinuousBatchingEngine:
@@ -130,7 +184,10 @@ class ContinuousBatchingEngine:
                  cache_interval: int = 1,
                  exit_tol: Optional[float] = None,
                  exit_patience: int = 2,
-                 exit_min_steps: int = 2):
+                 exit_min_steps: int = 2,
+                 mesh: Optional[Mesh] = None,
+                 slots_per_device: Optional[int] = None,
+                 overlap_decode: Optional[bool] = None):
         """``noise_model`` / ``noise_seed`` configure the ``w8a8+noise``
         policy (defaults: the paper's analog perturbation model, seed 0).
         ``quality_probe``: run the full-step fp32 reference + PSNR/MSE
@@ -144,19 +201,47 @@ class ContinuousBatchingEngine:
         per field; ``exit_tol=None`` leaves early exit off).
         ``exit_min_steps``: never early-exit before this many executed
         steps (at least 2 — the convergence signal needs two x0
-        predictions)."""
+        predictions).
+
+        ``mesh``: a 1-D ``('data',)`` mesh (``launch.mesh.serving_mesh``)
+        shards the slot axis of every buffer across its devices.
+        ``slots_per_device`` overrides ``slots`` with a per-device budget
+        (the invariant ``elastic_resize`` preserves); otherwise ``slots``
+        is rounded up to divide the mesh.  ``overlap_decode`` (default:
+        on exactly when sharded) pipelines drained requests' VAE decodes
+        behind the next denoise tick."""
         if slots < 1:
             raise ValueError('need at least one slot')
         if cache_interval < 1:
             raise ValueError('cache_interval must be >= 1')
         self._created = time.perf_counter()   # time-to-first-tick origin
         self.pipe = pipe
+        self.mesh = mesh
+        if mesh is not None:
+            if 'data' not in mesh.axis_names:
+                raise ValueError("serving mesh needs a 'data' axis")
+            ndev = int(mesh.shape['data'])
+            if slots_per_device is not None:
+                if slots_per_device < 1:
+                    raise ValueError('slots_per_device must be >= 1')
+                slots = slots_per_device * ndev
+            else:
+                slots = align_slots(slots, ndev)
+            self._slots_per_device = slots // ndev
+            self.monitor = StepMonitor(n_hosts=ndev)
+        else:
+            self._slots_per_device = slots
+            self.monitor = None
         self.slots = slots
+        self.overlap_decode = (mesh is not None) if overlap_decode is None \
+            else bool(overlap_decode)
         self.context = context
         # `is not None`, not truthiness: an empty AdmissionQueue is falsy
         # (len() == 0), and `or` would silently drop its depth bound
         self.queue = queue if queue is not None else AdmissionQueue()
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        if mesh is not None:
+            self.metrics.devices = int(mesh.shape['data'])
         self.photonic = photonic or (
             PhotonicAccountant(pipe.unet_cfg) if track_energy else None)
         self.noise_model = noise_model
@@ -168,10 +253,19 @@ class ContinuousBatchingEngine:
         self.exit_min_steps = max(2, exit_min_steps)
         cfg = pipe.unet_cfg
         self._sample_shape = (cfg.img_size, cfg.img_size, cfg.in_ch)
-        self.x = jnp.zeros((slots,) + self._sample_shape, jnp.float32)
+        # slot-axis sharding of every (slots, ...) buffer; None when
+        # single-device.  Rebuilt (with the buffers and every jitted fn
+        # whose out_shardings pin it) by elastic_resize.
+        self._shard = None if mesh is None else named(mesh, PSpec('data'))
+        self.x = self._zeros_buf((slots,) + self._sample_shape)
         # previous-tick x0 predictions (the early-exit convergence signal)
-        self.x0 = jnp.zeros_like(self.x)
+        self.x0 = self._zeros_buf((slots,) + self._sample_shape)
         self._slot: List[Optional[_Active]] = [None] * slots
+        self._pending: List[_Pending] = []   # decode-overlap in flight
+        # requests displaced by an elastic shrink: (active, x row, x0 row)
+        # host triples, re-admitted ahead of the queue as slots free
+        self._parked: List[Tuple[_Active, np.ndarray, np.ndarray]] = []
+        self._tick_s: Optional[float] = None  # measured service rate
         self._traj: Dict[int, np.ndarray] = {}
         self._wall_t0 = 0.0          # wall-clock origin (set by replay)
         self._probe_done = 0         # completed probe-eligible requests
@@ -190,6 +284,7 @@ class ContinuousBatchingEngine:
         # level, one row per slot (shape discovered by abstract evaluation
         # of the refresh pass — policies don't change it)
         self._cache_c = self._cache_u = None
+        self._cache_row = None       # (row shape, dtype) for resize rebuilds
         if self.cache_interval > 1:
             cache_s = jax.eval_shape(
                 lambda xx, tt: unet_apply_cached(
@@ -198,16 +293,38 @@ class ContinuousBatchingEngine:
                 jax.ShapeDtypeStruct((slots,) + self._sample_shape,
                                      jnp.float32),
                 jax.ShapeDtypeStruct((slots,), jnp.int32))[1]
-            self._cache_c = jnp.zeros(cache_s.shape, cache_s.dtype)
+            self._cache_row = (tuple(cache_s.shape[1:]), cache_s.dtype)
+            self._cache_c = self._zeros_buf(cache_s.shape, cache_s.dtype)
             if self.context is not None:
                 # classifier-free guidance caches the unconditional
                 # branch's deep features separately
-                self._cache_u = jnp.zeros(cache_s.shape, cache_s.dtype)
+                self._cache_u = self._zeros_buf(cache_s.shape, cache_s.dtype)
 
+        self._build_helpers()
+
+    def _zeros_buf(self, shape, dtype=jnp.float32):
+        """A zero (slots, ...) buffer, placed sharded over the mesh's
+        ``data`` axis when the engine is sharded."""
+        buf = jnp.zeros(shape, dtype)
+        if self._shard is not None:
+            buf = jax.device_put(buf, self._shard)
+        return buf
+
+    def _build_helpers(self) -> None:
+        """(Re)build the fixed-shape jitted helpers.  ``_place`` pins its
+        output to the slot sharding so single-sample writes never gather
+        the buffer onto one device.  Called at construction and again by
+        ``elastic_resize`` — ``out_shardings`` captures the mesh, so a
+        topology change must re-create the wrapped functions."""
+        pipe = self.pipe
         # initial noise exactly as ddim_sample: x = normal(split(key)[0], .)
         self._init_noise = jax.jit(lambda key: jax.random.normal(
             jax.random.split(key)[0], (1,) + self._sample_shape)[0])
-        self._place = jax.jit(lambda x, i, v: x.at[i].set(v))
+        if self._shard is not None:
+            self._place = jax.jit(lambda x, i, v: x.at[i].set(v),
+                                  out_shardings=self._shard)
+        else:
+            self._place = jax.jit(lambda x, i, v: x.at[i].set(v))
         self._take = jax.jit(lambda x, i: x[i])
         if pipe.vae_params is not None:
             self._decode = jax.jit(lambda z: AE.vae_decode(
@@ -250,9 +367,14 @@ class ContinuousBatchingEngine:
                 delta)
 
     def _make_step(self, pol: PrecisionPolicy, use_guidance: bool):
-        pipe, sched = self.pipe, self.pipe.sched
+        pipe, sched, mesh = self.pipe, self.pipe.sched, self.mesh
 
         def step(x, x0p, t, t_prev, active, guidance, key):
+            if mesh is not None:
+                # pin the slot axis to the data axis so XLA never inserts
+                # a gather: the whole step stays row-parallel
+                x = shard_hint(x, 'data', mesh=mesh)
+                x0p = shard_hint(x0p, 'data', mesh=mesh)
             nkey = key if pol.noisy else None
             if use_guidance:
                 # per-slot classifier-free guidance: blend against the
@@ -280,6 +402,12 @@ class ContinuousBatchingEngine:
         and leaves the buffers untouched."""
         pipe, sched, cfg = self.pipe, self.pipe.sched, self.pipe.unet_cfg
         params = pipe.unet_params
+        mesh = self.mesh
+
+        def pin(*bufs):
+            if mesh is None:
+                return bufs
+            return tuple(shard_hint(b, 'data', mesh=mesh) for b in bufs)
 
         def eval_cached(x, t, cache, context, nkey):
             return unet_apply_cached(params, cfg, x, t, cache, refresh,
@@ -288,6 +416,7 @@ class ContinuousBatchingEngine:
         if use_guidance:
             def step(x, x0p, cache_c, cache_u, t, t_prev, active,
                      guidance, key):
+                x, x0p, cache_c, cache_u = pin(x, x0p, cache_c, cache_u)
                 nkey = key if pol.noisy else None
                 ukey = jax.random.fold_in(key, 1) if pol.noisy else None
                 eps_c, new_c = eval_cached(x, t, cache_c, self.context, nkey)
@@ -303,6 +432,7 @@ class ContinuousBatchingEngine:
                 return x_out, x0_out, delta, cache_c, cache_u
         else:
             def step(x, x0p, cache_c, t, t_prev, active, guidance, key):
+                x, x0p, cache_c = pin(x, x0p, cache_c)
                 nkey = key if pol.noisy else None
                 eps, new_c = eval_cached(x, t, cache_c, self.context, nkey)
                 x_out, x0_out, delta = self._finish_step(
@@ -317,8 +447,10 @@ class ContinuousBatchingEngine:
         k = (precision, guided)
         if k not in self._steps:
             pol = self._policy_for(precision)
+            kw = {} if self._shard is None else {
+                'out_shardings': (self._shard,) * 3}
             self._steps[k] = jax.jit(self._make_step(pol, guided),
-                                     donate_argnums=(0, 1))
+                                     donate_argnums=(0, 1), **kw)
         return self._steps[k]
 
     def _get_cached_step(self, precision: str, guided: bool, refresh: bool):
@@ -326,9 +458,12 @@ class ContinuousBatchingEngine:
         if k not in self._csteps:
             pol = self._policy_for(precision)
             donate = (0, 1, 2, 3) if guided else (0, 1, 2)
+            n_out = 5 if guided else 4
+            kw = {} if self._shard is None else {
+                'out_shardings': (self._shard,) * n_out}
             self._csteps[k] = jax.jit(
                 self._make_cached_step(pol, guided, refresh),
-                donate_argnums=donate)
+                donate_argnums=donate, **kw)
         return self._csteps[k]
 
     def _tick_key(self, pol: PrecisionPolicy, tick_idx: int):
@@ -347,7 +482,30 @@ class ContinuousBatchingEngine:
 
     @property
     def busy(self) -> bool:
-        return self.active_count > 0 or len(self.queue) > 0
+        return (self.active_count > 0 or len(self.queue) > 0
+                or bool(self._pending) or bool(self._parked))
+
+    @property
+    def tick_s_estimate(self) -> Optional[float]:
+        """Measured steady-state seconds per tick (None until
+        ``measure_tick_s`` runs, settable so deployments can pin it).
+        Feeds the admission-time SLO margin: a queued request whose
+        deadline lands inside its own estimated service time is shed at
+        admission instead of burning slot time on a guaranteed miss."""
+        return self._tick_s
+
+    @tick_s_estimate.setter
+    def tick_s_estimate(self, value: Optional[float]) -> None:
+        self._tick_s = None if value is None else float(value)
+
+    def _service_margin_s(self, req: GenerationRequest) -> float:
+        """Estimated service time were ``req`` admitted right now — the
+        expiry margin.  One engine tick advances every in-flight request
+        one step, so a request needs ~``steps`` ticks of residence.  0
+        (expire only already-dead entries) until a tick estimate exists."""
+        if self._tick_s is None:
+            return 0.0
+        return req.steps * self._tick_s
 
     def compile_stats(self) -> Dict[str, int]:
         """Per-jitted-function compile counts (cache sizes).  Constant
@@ -405,12 +563,37 @@ class ContinuousBatchingEngine:
     def _cached_active(self) -> int:
         return sum(a is not None and a.cache_on for a in self._slot)
 
+    def _unpark(self, idx: int) -> None:
+        """Re-admit the oldest parked request into free slot ``idx``:
+        restore its latent and x0 rows from the host copies.  DeepCache
+        feature rows are NOT parked (their shape differs from the sample
+        shape, and a resize changes their buffer anyway), so a
+        cache-enabled request re-enters with ``force_refresh`` — its
+        first tick back is a full pass that rewrites the rows."""
+        a, hx, hx0 = self._parked.pop(0)
+        self.x = self._place(self.x, jnp.int32(idx), jnp.asarray(hx))
+        self.x0 = self._place(self.x0, jnp.int32(idx), jnp.asarray(hx0))
+        if a.cache_on:
+            a.force_refresh = True
+        self._slot[idx] = a
+
     def _admit(self, now: float) -> None:
-        if getattr(self.queue, 'shed_policy', None) == 'deadline-aware':
-            # a request whose deadline passed while queued must never
-            # occupy a slot — shed it at admission instead
-            for _ in self.queue.expire(now):
+        # expire whenever ANY queued entry carries a deadline — the SLO
+        # is a property of the request, not of the shed policy, so a
+        # dead request must never occupy a slot under 'reject-newest' or
+        # an unbounded queue either.  The margin folds in the estimated
+        # service time: a request that would only FINISH past its
+        # deadline is equally dead at admission time.
+        if getattr(self.queue, 'has_deadlines', False):
+            for _ in self.queue.expire(now, margin_s=self._service_margin_s):
                 self.metrics.record_shed('expired')
+        # parked (resize-displaced) requests re-enter ahead of the queue;
+        # force_refresh lets them rejoin mid-cadence (a mixed tick)
+        for idx in range(self.slots):
+            if not self._parked:
+                break
+            if self._slot[idx] is None:
+                self._unpark(idx)
         if self.cache_interval > 1:
             if self._cached_active() == 0:
                 # nothing riding the cadence: re-anchor it so admission
@@ -467,15 +650,28 @@ class ContinuousBatchingEngine:
         psnr = math.inf if mse <= 0.0 else 10.0 * math.log10(rng * rng / mse)
         return mse, psnr
 
-    def _drain(self, idx: int, now: float,
-               wall_clock: bool = False,
-               early: bool = False) -> GenerationResult:
+    def _begin_drain(self, idx: int, now: float,
+                     wall_clock: bool = False,
+                     early: bool = False) -> _Pending:
+        """Dispatch a finished slot's VAE decode and free the slot.
+        Dispatch only — no device sync — so under decode overlap the
+        decode executes behind the next tick's UNet step and the slot is
+        refillable immediately; ``_finish_drain`` pays the sync."""
         a = self._slot[idx]
         # an early-exit drain commits the CONVERGED x0 prediction — the
         # speculative clean image — instead of the partially-denoised x
         z = self._take(self.x0 if early else self.x, jnp.int32(idx))[None]
         if self._decode is not None:
             z = self._decode(z)
+        self._slot[idx] = None
+        return _Pending(active=a, z=z, now=now, wall_clock=wall_clock,
+                        early=early)
+
+    def _finish_drain(self, p: _Pending) -> GenerationResult:
+        """Materialize a dispatched drain: device sync, latency stamp,
+        energy + quality accounting, completion metrics."""
+        a, z, now, wall_clock, early = (p.active, p.z, p.now,
+                                        p.wall_clock, p.early)
         req = a.request
         pol = self._policy_for(req.precision)
         guided = req.guidance > 0.0 and self.context is not None
@@ -513,8 +709,18 @@ class ContinuousBatchingEngine:
             steps_executed=a.i, full_evals=a.full_evals,
             cached_evals=a.cached_evals, early_exit=early)
         self.metrics.record_complete(res, slo_ms=req.slo_ms)
-        self._slot[idx] = None
         return res
+
+    def _flush_pending(self, overlapped: bool) -> List[GenerationResult]:
+        """Materialize every in-flight decode.  ``overlapped=True`` when
+        a UNet step was dispatched between the decode dispatch and this
+        sync (the decode actually hid behind compute)."""
+        if not self._pending:
+            return []
+        pending, self._pending = self._pending, []
+        if overlapped:
+            self.metrics.record_overlapped_decode(len(pending))
+        return [self._finish_drain(p) for p in pending]
 
     def tick(self, now: Optional[float] = None,
              wall_clock: Optional[bool] = None) -> List[GenerationResult]:
@@ -524,12 +730,19 @@ class ContinuousBatchingEngine:
 
         ``wall_clock`` (default: `now` not given) makes drained results
         re-stamp their finish time after the device sync, so reported
-        latencies include the final step + VAE decode."""
+        latencies include the final step + VAE decode.
+
+        Under decode overlap a finished request's result surfaces on the
+        FOLLOWING tick (its decode materializes after that tick's step
+        is dispatched); an idle tick flushes the stragglers."""
         wall_clock = (now is None) if wall_clock is None else wall_clock
         now = time.perf_counter() - self._wall_t0 if now is None else now
+        t_tick0 = time.perf_counter()
         self._admit(now)
         if self.active_count == 0:
-            return []
+            # nothing to step: materialize leftover overlapped decodes
+            # (no compute to hide behind, so not counted as overlapped)
+            return self._flush_pending(overlapped=False)
         caching = self.cache_interval > 1
         refresh_tick = self._phase == 0
         t = np.zeros(self.slots, np.int32)
@@ -543,7 +756,8 @@ class ContinuousBatchingEngine:
             t[idx] = a.ts[a.i]
             t_prev[idx] = a.ts[a.i + 1] if a.i + 1 < len(a.ts) else -1
             guidance[idx] = a.request.guidance
-            needs_refresh[idx] = (not a.cache_on) or a.i == 0 or refresh_tick
+            needs_refresh[idx] = ((not a.cache_on) or a.i == 0
+                                  or refresh_tick or a.force_refresh)
             if a.exit_tol > 0.0 and a.i + 1 >= self.exit_min_steps:
                 track_exit = True
         groups = group_by_precision(
@@ -594,6 +808,9 @@ class ContinuousBatchingEngine:
                     self.x, self.x0, d = step_fn(
                         self.x, self.x0, t_d, tp_d, m_d, g_d, key)
                 delta_parts.append((m, d))
+        # decode overlap: decodes dispatched LAST tick materialize now,
+        # behind the UNet step(s) just launched above
+        done: List[GenerationResult] = self._flush_pending(overlapped=True)
         if self.metrics.first_tick_s is None:
             # cold-start probe: time-to-first-served-tick, device work
             # included (one extra sync, paid once per metrics object)
@@ -607,27 +824,42 @@ class ContinuousBatchingEngine:
             for m, d in delta_parts:
                 dn = np.asarray(d)
                 deltas[m] = dn[m]
-        done: List[GenerationResult] = []
         for idx, a in enumerate(self._slot):
             if a is None:
                 continue
             if needs_refresh[idx]:
                 a.full_evals += 1
+                a.force_refresh = False      # cache rows rewritten
             else:
                 a.cached_evals += 1
             a.i += 1
+            finished = early = False
             if a.i >= len(a.ts):
-                done.append(self._drain(idx, now, wall_clock=wall_clock))
+                finished = True
             elif a.exit_tol > 0.0 and a.i >= self.exit_min_steps:
                 if deltas[idx] < a.exit_tol:
                     a.exit_streak += 1
                 else:
                     a.exit_streak = 0
                 if a.exit_streak >= a.exit_patience:
-                    done.append(self._drain(idx, now, wall_clock=wall_clock,
-                                            early=True))
+                    finished = early = True
+            if finished:
+                p = self._begin_drain(idx, now, wall_clock=wall_clock,
+                                      early=early)
+                if self.overlap_decode:
+                    self._pending.append(p)   # sync behind the next tick
+                else:
+                    done.append(self._finish_drain(p))
         if caching and had_cached:
             self._phase = (self._phase + 1) % self.cache_interval
+        if self.monitor is not None:
+            # one process drives every simulated device, so each shard
+            # records the same wall tick time — the hook a real
+            # deployment feeds per-device timings into (check() then
+            # recommends the elastic_resize target)
+            dt = time.perf_counter() - t_tick0
+            for dev in range(int(self.mesh.shape['data'])):
+                self.monitor.record(dev, dt)
         return done
 
     def run_until_idle(self, now: Optional[float] = None,
@@ -645,10 +877,15 @@ class ContinuousBatchingEngine:
         raise RuntimeError(f'engine still busy after {max_ticks} ticks')
 
     def replay(self, requests: List[GenerationRequest],
-               max_ticks: int = 1_000_000) -> List[GenerationResult]:
+               max_ticks: int = 1_000_000,
+               on_result=None) -> List[GenerationResult]:
         """Wall-clock replay of an arrival trace: each request is
         submitted once the serving clock passes its ``arrival_time``;
-        the engine idles (sleeps) when nothing has arrived yet."""
+        the engine idles (sleeps) when nothing has arrived yet.
+        ``on_result`` is called with each result as it completes —
+        the hook deployments use to trigger a mid-replay
+        ``elastic_resize`` (any results it flushes should be collected
+        by the caller; they do not pass through this return value)."""
         pending = sorted(requests, key=lambda r: r.arrival_time)
         t0 = self._wall_t0 = time.perf_counter()
         results: List[GenerationResult] = []
@@ -664,9 +901,77 @@ class ContinuousBatchingEngine:
             # async dispatch overlaps host bookkeeping with device compute;
             # every drain materializes its image (device sync), so dispatch
             # can run ahead by at most one request's remaining steps
-            results.extend(self.tick(now=time.perf_counter() - t0,
-                                     wall_clock=True))
+            batch = self.tick(now=time.perf_counter() - t0,
+                              wall_clock=True)
+            results.extend(batch)
+            if on_result is not None:
+                for res in batch:
+                    on_result(res)
         raise RuntimeError('replay exceeded max_ticks')
+
+    def elastic_resize(self, n_devices: Optional[int] = None,
+                       devices=None, warm: bool = True,
+                       precisions=('fp32',)) -> List[GenerationResult]:
+        """Rebuild the slot buffer on a new ``('data',)`` mesh after
+        devices drop or rejoin, preserving in-flight work.
+
+        ``distributed.fault_tolerance.elastic_serving_plan`` sizes the
+        new mesh and slot buffer at this engine's per-device slot budget
+        (drop devices -> smaller buffer, never an overloaded survivor).
+        In-flight latents and x0 trackers gather to the host and
+        re-place onto the new buffer; when it is smaller, the overflow
+        PARKS on the host and re-enters freed slots ahead of the queue.
+        Every jitted function whose ``out_shardings`` pinned the old
+        mesh is dropped and re-lowered for the new topology;
+        ``warm=True`` pre-compiles the step variants via ``aot_warmup``
+        (off the serving path — with a persistent compilation cache the
+        re-lowering is a disk read).  Pending overlapped decodes flush
+        first and their results are returned.  ``n_devices`` takes the
+        first N visible devices; ``devices`` passes the surviving list
+        explicitly."""
+        if self.mesh is None:
+            raise ValueError('elastic_resize needs a mesh-sharded engine '
+                             '(construct with mesh=serving_mesh(...))')
+        if n_devices is None and devices is None:
+            raise ValueError('pass n_devices or an explicit device list')
+        flushed = self._flush_pending(overlapped=False)
+        from repro.launch.mesh import serving_mesh
+        mesh = serving_mesh(n_devices=n_devices, devices=devices)
+        old_ndev = int(self.mesh.shape['data'])
+        new_ndev = int(mesh.shape['data'])
+        _, _, new_slots = elastic_serving_plan(new_ndev,
+                                               self._slots_per_device)
+        # gather in-flight rows to the host before the old buffers die
+        hx, hx0 = np.asarray(self.x), np.asarray(self.x0)
+        live = [(a, hx[i], hx0[i]) for i, a in enumerate(self._slot)
+                if a is not None]
+        self.mesh = mesh
+        self.slots = new_slots
+        self._shard = named(mesh, PSpec('data'))
+        self.x = self._zeros_buf((new_slots,) + self._sample_shape)
+        self.x0 = self._zeros_buf((new_slots,) + self._sample_shape)
+        if self._cache_row is not None:
+            row_shape, row_dtype = self._cache_row
+            self._cache_c = self._zeros_buf((new_slots,) + row_shape,
+                                            row_dtype)
+            if self._cache_u is not None:
+                self._cache_u = self._zeros_buf((new_slots,) + row_shape,
+                                                row_dtype)
+        self._slot = [None] * new_slots
+        # in-flight work ahead of previously-parked work ahead of queue
+        self._parked = live + self._parked
+        self._steps.clear()
+        self._csteps.clear()
+        self._build_helpers()
+        self.monitor = StepMonitor(n_hosts=new_ndev)
+        self.metrics.record_resize(old_ndev, new_ndev)
+        for idx in range(self.slots):
+            if not self._parked:
+                break
+            self._unpark(idx)
+        if warm:
+            self.aot_warmup(precisions=precisions)
+        return flushed
 
     def warmup(self, precisions=('fp32',),
                cache_dir: Optional[str] = None) -> float:
@@ -714,6 +1019,7 @@ class ContinuousBatchingEngine:
             self.quality_probe = saved_probe
         dt = time.perf_counter() - t0
         self.metrics.record_warmup(dt)
+        trim_cache()    # enforce the persistent-cache size bound, if any
         return dt
 
     def step_variants(self, precisions=('fp32',)):
@@ -749,7 +1055,10 @@ class ContinuousBatchingEngine:
             enable_persistent_cache(cache_dir)
         t0 = time.perf_counter()
         S = jax.ShapeDtypeStruct
-        xs = S((self.slots,) + self._sample_shape, jnp.float32)
+        # sharded engines lower against slot-sharded buffer shapes, so
+        # the persisted executables are exactly the ones serving uses
+        sh = {} if self._shard is None else {'sharding': self._shard}
+        xs = S((self.slots,) + self._sample_shape, jnp.float32, **sh)
         ti = S((self.slots,), jnp.int32)
         act = S((self.slots,), jnp.bool_)
         gd = S((self.slots,), jnp.float32)
@@ -761,7 +1070,7 @@ class ContinuousBatchingEngine:
                 fn.lower(xs, xs, ti, ti, act, gd, key).compile()
             else:
                 fn = self._get_cached_step(pname, guided, refresh)
-                cs = S(self._cache_c.shape, self._cache_c.dtype)
+                cs = S(self._cache_c.shape, self._cache_c.dtype, **sh)
                 if guided:
                     fn.lower(xs, xs, cs, cs, ti, ti, act, gd,
                              key).compile()
@@ -778,6 +1087,7 @@ class ContinuousBatchingEngine:
             self._decode.lower(S((1,) + self._sample_shape,
                                  jnp.float32)).compile()
             n += 1
+        trim_cache()    # enforce the persistent-cache size bound, if any
         return {'variants': n, 'seconds': time.perf_counter() - t0}
 
     def measure_tick_s(self, steps: int = 4) -> float:
@@ -802,4 +1112,5 @@ class ContinuousBatchingEngine:
         finally:
             self.queue, self.metrics = saved_q, saved_m
             self.quality_probe = saved_probe
-        return dt / ticks
+        self._tick_s = dt / ticks    # feeds the admission SLO margin
+        return self._tick_s

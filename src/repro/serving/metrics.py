@@ -35,7 +35,7 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.serving.api import GenerationResult
 
@@ -163,6 +163,11 @@ class MetricsSnapshot:
     steps_saved: int = 0         # total requested-minus-executed steps
     steps_saved_hist: Dict[int, int] = dataclasses.field(
         default_factory=dict)
+    # sharded-serving counters
+    resizes: int = 0             # elastic mesh resizes survived
+    devices: int = 1             # slot-shard count after the last resize
+    overlapped_decodes: int = 0  # drains whose VAE decode overlapped the
+    #                              next denoise tick (async dispatch)
     # accuracy-vs-EPB frontier: per-policy aggregates over completed work
     frontier: Dict[str, Dict[str, float]] = dataclasses.field(
         default_factory=dict)
@@ -188,6 +193,9 @@ class ServingMetrics:
         self.early_exits = 0
         self.steps_saved = 0
         self.steps_saved_hist: Dict[int, int] = {}
+        self.resizes: List[Tuple[int, int]] = []    # (old, new) devices
+        self.devices = 1
+        self.overlapped_decodes = 0
         self.results: List[GenerationResult] = []
         self.frontier_points: List[FrontierPoint] = []
         self._latencies: List[float] = []       # kept sorted
@@ -225,6 +233,16 @@ class ServingMetrics:
         the cold-start time-to-first-tick.  First call wins."""
         if self.first_tick_s is None:
             self.first_tick_s = seconds
+
+    def record_resize(self, old_devices: int, new_devices: int):
+        """One elastic mesh resize survived (devices dropped/rejoined)."""
+        self.resizes.append((old_devices, new_devices))
+        self.devices = new_devices
+
+    def record_overlapped_decode(self, n: int = 1):
+        """Drains whose VAE decode was dispatched asynchronously and
+        materialized only after the NEXT denoise tick launched."""
+        self.overlapped_decodes += n
 
     def record_tick(self, active_slots: int,
                     full_slots: Optional[int] = None,
@@ -379,6 +397,9 @@ class ServingMetrics:
             early_exits=self.early_exits,
             steps_saved=self.steps_saved,
             steps_saved_hist=dict(self.steps_saved_hist),
+            resizes=len(self.resizes),
+            devices=self.devices,
+            overlapped_decodes=self.overlapped_decodes,
             frontier=self.frontier())
 
     def summary(self) -> Dict[str, float]:
@@ -404,4 +425,7 @@ class ServingMetrics:
             'cache_hit_rate': s.cache_hit_rate,
             'early_exits': float(s.early_exits),
             'steps_saved': float(s.steps_saved),
+            'resizes': float(s.resizes),
+            'devices': float(s.devices),
+            'overlapped_decodes': float(s.overlapped_decodes),
         }

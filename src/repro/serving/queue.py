@@ -15,10 +15,12 @@ Two shedding policies govern what happens when the bound is hit:
   deadline (the one most likely to miss its SLO anyway) is evicted in
   favor of an incoming request with more slack; an arrival with less
   slack than everything queued is rejected instead.  Entries without an
-  SLO have an infinite deadline and are never evicted.  Pair this with
-  ``expire()`` — called by the engine before admission — so a request
-  whose deadline already passed while queued is dropped rather than
-  occupying a denoising slot it can only waste.
+  SLO have an infinite deadline and are never evicted.  Entries are
+  stamped with their deadline under EVERY policy, and the engine calls
+  ``expire()`` before admission whenever any queued entry carries one
+  (``has_deadlines``) — so a request whose deadline already passed
+  while queued is dropped rather than occupying a denoising slot it can
+  only waste, regardless of the shed policy at the depth bound.
 
 Shed accounting is split by cause: ``rejected`` (arrivals turned away at
 the bound), ``evicted`` (queued entries displaced by deadline-aware
@@ -30,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple, Union
 
 from repro.serving.api import GenerationRequest
 
@@ -70,6 +72,15 @@ class AdmissionQueue:
     def shed(self) -> int:
         """Total requests shed, across all causes."""
         return self.rejected + self.evicted + self.expired
+
+    @property
+    def has_deadlines(self) -> bool:
+        """True when any queued entry carries a finite deadline.  The
+        engine keys expiry on THIS, not on the shed policy: a request
+        with an ``slo_ms`` must be expired even under ``reject-newest``
+        or an unbounded queue — otherwise it can sit past its deadline
+        and still take a denoising slot."""
+        return any(e[2].deadline < math.inf for e in self._heap)
 
     @staticmethod
     def _deadline(req: GenerationRequest, now: float) -> float:
@@ -120,18 +131,26 @@ class AdmissionQueue:
         return self._heap[0][2]
 
     def expire(self, now: float,
-               margin_s: float = 0.0) -> List[Queued]:
+               margin_s: Union[float,
+                               Callable[[GenerationRequest], float]] = 0.0
+               ) -> List[Queued]:
         """Remove and return every queued entry whose deadline has
         already passed (``deadline < now + margin_s``) — a dead request
         must never occupy a denoising slot.  ``margin_s`` lets the
         caller fold in an estimated service time so a request that
-        *will* miss by the time it finishes is shed at admission too.
-        Counts into ``expired``."""
-        cutoff = now + margin_s
-        dead = [e for e in self._heap if e[2].deadline < cutoff]
+        *will* miss by the time it finishes is shed at admission too;
+        pass a callable ``request -> seconds`` for per-request margins
+        (the engine folds in ``steps x measured tick time``, which
+        differs per request).  Counts into ``expired``."""
+        margin = margin_s if callable(margin_s) else (lambda _r: margin_s)
+
+        def dead_entry(e) -> bool:
+            return e[2].deadline < now + margin(e[2].request)
+
+        dead = [e for e in self._heap if dead_entry(e)]
         if not dead:
             return []
-        self._heap = [e for e in self._heap if e[2].deadline >= cutoff]
+        self._heap = [e for e in self._heap if not dead_entry(e)]
         heapq.heapify(self._heap)
         self.expired += len(dead)
         return [q for _, _, q in sorted(dead, key=lambda e: e[1])]

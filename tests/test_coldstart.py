@@ -178,3 +178,66 @@ def test_cold_then_warm_restart_uses_persistent_cache():
         assert warm['warmup_s'] < cold['warmup_s'], \
             (f"warm warmup {warm['warmup_s']:.2f}s not faster than "
              f"cold {cold['warmup_s']:.2f}s")
+
+
+# ---------------------------------------------------------------------------
+# persistent-cache size bound (LRU eviction)
+# ---------------------------------------------------------------------------
+
+def _fake_entry(d, name, size, age_s):
+    """A fake cache entry `age_s` old (atime == mtime == now - age_s)."""
+    path = os.path.join(d, name)
+    with open(path, 'wb') as f:
+        f.write(b'\0' * size)
+    import time
+    t = time.time() - age_s
+    os.utime(path, (t, t))
+    return path
+
+
+@pytest.mark.coldstart
+def test_trim_cache_evicts_lru_until_under_budget(tmp_path):
+    """The size bound evicts least-recently-used entries first and stops
+    as soon as the directory fits; eviction counts surface through
+    cache_entries(with_evictions=True)."""
+    from repro.serving import cache_entries, cache_evictions, trim_cache
+    d = str(tmp_path)
+    _fake_entry(d, 'oldest', 400, age_s=300)
+    _fake_entry(d, 'middle', 400, age_s=200)
+    _fake_entry(d, 'newest', 400, age_s=100)
+    ev0 = cache_evictions()
+    assert trim_cache(d, max_bytes=2000) == 0          # already fits
+    assert trim_cache(d, max_bytes=800) == 1           # oldest goes
+    assert sorted(os.listdir(d)) == ['middle', 'newest']
+    assert trim_cache(d, max_bytes=100) == 2           # both go
+    assert os.listdir(d) == []
+    n, evicted = cache_entries(d, with_evictions=True)
+    assert n == 0 and evicted - ev0 == 3
+
+
+@pytest.mark.coldstart
+def test_trim_cache_noop_without_bound_or_dir(tmp_path):
+    from repro.serving import trim_cache
+    assert trim_cache(str(tmp_path), max_bytes=None) == 0
+    assert trim_cache(str(tmp_path / 'missing'), max_bytes=10) == 0
+
+
+@pytest.mark.coldstart
+def test_enable_with_max_bytes_trims_and_persists_bound(tmp_path):
+    """enable_persistent_cache(max_bytes=...) trims immediately, and an
+    idempotent re-enable without max_bytes (what engine.warmup does)
+    keeps the configured bound instead of clobbering it."""
+    from repro.serving import compile_cache as cc
+    d = str(tmp_path / 'cache')
+    os.makedirs(d)
+    _fake_entry(d, 'a', 600, age_s=60)
+    _fake_entry(d, 'b', 600, age_s=30)
+    try:
+        cc.enable_persistent_cache(d, max_bytes=700)
+        assert os.listdir(d) == ['b']                  # trimmed on enable
+        cc.enable_persistent_cache(d)                  # warmup's re-enable
+        _fake_entry(d, 'c', 600, age_s=0)
+        cc.trim_cache()                                # bound still active
+        assert os.listdir(d) == ['c']
+    finally:
+        cc.disable_persistent_cache()

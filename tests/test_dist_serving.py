@@ -1,0 +1,239 @@
+"""Sharded multi-device serving tests (8 simulated CPU devices).
+
+The device count locks at first jax init, so every mesh scenario runs in
+ONE subprocess (module-scope fixture) under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and reports a
+JSON blob; the tests here assert on it.  Scenarios:
+
+  * slot-sharded engine matches the single-device engine per request
+    (atol 1e-5 — one-ulp XLA fusion differences between the batch-N
+    kernel and the per-device kernels preclude bitwise identity) and is
+    bitwise DETERMINISTIC across two sharded runs;
+  * zero recompiles after one warmup, serving on the mesh;
+  * decode overlap: results surface with overlapped decodes counted;
+  * elastic 8 -> 4 resize mid-flight completes every request (overflow
+    parks and re-enters) and 4 -> 8 grows back;
+  * shed accounting reconciles under a bounded queue and under
+    service-time-aware expiry: completed + shed == offered.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.distributed.fault_tolerance import elastic_serving_plan
+from repro.serving import align_slots
+
+SRC = os.path.join(os.path.dirname(__file__), '..', 'src')
+
+pytestmark = pytest.mark.dist_serving
+
+_CHILD = '''
+import json
+import jax, numpy as np
+from repro.models.unet import UNetConfig
+from repro.diffusion.pipeline import DiffusionPipeline
+from repro.launch.mesh import serving_mesh
+from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
+                           GenerationRequest)
+
+TINY = UNetConfig('tiny-dist', img_size=16, in_ch=3, base_ch=32,
+                  ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                  n_heads=4, timesteps=16)
+pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), TINY)
+report = {'n_devices': jax.device_count()}
+
+def reqs(n, steps=5, start=0, **kw):
+    return [GenerationRequest(request_id=start + i, seed=100 + start + i,
+                              steps=steps, exit_tol=0.0, **kw)
+            for i in range(n)]
+
+def reqs_var(n, start=0):
+    # staggered step counts so drains happen while others still step —
+    # the decode-overlap window
+    return [GenerationRequest(request_id=start + i, seed=100 + start + i,
+                              steps=4 + i % 3, exit_tol=0.0)
+            for i in range(n)]
+
+def serve(engine, requests, now=0.0):
+    out = []
+    for r in requests:
+        engine.submit(r, now=now)
+    out.extend(engine.run_until_idle(now=now))
+    return {r.request_id: r.image for r in out}
+
+# --- single-device reference -------------------------------------------
+e1 = ContinuousBatchingEngine(pipe, slots=8, quality_probe=0)
+e1.warmup()
+ref = serve(e1, reqs_var(6))
+
+# --- sharded engine: parity, zero recompiles, overlap ------------------
+def sharded_run():
+    e = ContinuousBatchingEngine(pipe, slots_per_device=1,
+                                 mesh=serving_mesh(8), quality_probe=0)
+    e.warmup()
+    stats0 = e.compile_stats()
+    imgs = serve(e, reqs_var(6))
+    return e, stats0, imgs
+
+e8, stats0, imgs = sharded_run()
+report['slots'] = e8.slots
+report['overlap_default_on'] = e8.overlap_decode
+report['x_sharded'] = 'data' in str(e8.x.sharding.spec)
+report['recompiles'] = {k: (stats0.get(k), v)
+                        for k, v in e8.compile_stats().items()
+                        if stats0.get(k) != v}
+report['max_abs_diff'] = max(
+    float(np.abs(ref[i] - imgs[i]).max()) for i in ref)
+report['overlapped_decodes'] = e8.metrics.overlapped_decodes
+report['all_completed'] = sorted(imgs) == sorted(ref)
+
+_, _, imgs2 = sharded_run()
+report['deterministic'] = all(np.array_equal(imgs[i], imgs2[i])
+                              for i in imgs)
+
+# --- elastic 8 -> 4 -> 8 with in-flight work ---------------------------
+ee = ContinuousBatchingEngine(pipe, slots_per_device=1,
+                              mesh=serving_mesh(8), quality_probe=0)
+ee.warmup()
+for r in reqs(8, steps=6, start=50):
+    ee.submit(r, now=0.0)
+ee.tick(now=0.0); ee.tick(now=0.0)          # all 8 slots 2 steps deep
+flushed = ee.elastic_resize(n_devices=4)     # 4 keep running, 4 park
+report['shrunk_slots'] = ee.slots
+done = flushed + ee.run_until_idle(now=0.0)
+report['resize_completed'] = sorted(r.request_id for r in done)
+report['resize_expected'] = list(range(50, 58))
+ee.elastic_resize(n_devices=8)               # devices rejoin
+grown = serve(ee, reqs(8, steps=3, start=70))
+report['grown_slots'] = ee.slots
+report['grow_completed'] = len(grown)
+snap = ee.metrics.snapshot()
+report['resizes'] = snap.resizes
+report['devices_after'] = snap.devices
+
+# --- shed accounting: bounded queue on the mesh ------------------------
+q = AdmissionQueue(max_depth=4, shed_policy='deadline-aware')
+es = ContinuousBatchingEngine(pipe, slots_per_device=1,
+                              mesh=serving_mesh(8), quality_probe=0,
+                              queue=q)
+es.warmup()
+offered = 20
+for r in reqs(offered, steps=4, start=200, slo_ms=60_000.0):
+    es.submit(r, now=0.0)                    # 8 slots + 4 queued + 8 shed
+completed = es.run_until_idle(now=0.0)
+s = es.metrics.summary()
+report['bounded'] = {'offered': offered, 'completed': len(completed),
+                     'shed': int(s['shed'])}
+
+# --- shed accounting: service-time-aware expiry ------------------------
+q2 = AdmissionQueue()                        # unbounded, NOT deadline-aware
+ex = ContinuousBatchingEngine(pipe, slots_per_device=1,
+                              mesh=serving_mesh(8), quality_probe=0,
+                              queue=q2)
+ex.warmup()
+offered2 = 12
+for r in reqs(offered2, steps=4, start=300, slo_ms=10_000.0):
+    ex.submit(r, now=0.0)                    # 8 active + 4 queued
+ex.tick_s_estimate = 1e6                     # queued 4 can never finish
+completed2 = ex.run_until_idle(now=0.0)
+s2 = ex.metrics.summary()
+report['expiry'] = {'offered': offered2, 'completed': len(completed2),
+                    'shed': int(s2['shed']),
+                    'by_reason': dict(ex.metrics.shed_by_reason)}
+print('REPORT ' + json.dumps(report))
+'''
+
+
+@pytest.fixture(scope='module')
+def mesh_report():
+    env = dict(os.environ,
+               XLA_FLAGS='--xla_force_host_platform_device_count=8',
+               PYTHONPATH=SRC, JAX_PLATFORMS='cpu')
+    out = subprocess.run([sys.executable, '-c', textwrap.dedent(_CHILD)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith('REPORT ')]
+    assert line, out.stdout
+    return json.loads(line[-1][len('REPORT '):])
+
+
+def test_mesh_simulated(mesh_report):
+    assert mesh_report['n_devices'] == 8
+    assert mesh_report['slots'] == 8          # 1 slot/device
+
+
+def test_sharded_matches_single_device(mesh_report):
+    """Per-request parity with the single-device engine at the engine's
+    equivalence tolerance, every request completed, and the slot buffer
+    actually sharded over the data axis."""
+    assert mesh_report['all_completed']
+    assert mesh_report['x_sharded']
+    assert mesh_report['max_abs_diff'] < 1e-5
+
+
+def test_sharded_engine_deterministic(mesh_report):
+    """Two identical sharded runs are BITWISE identical (the 1e-5 vs the
+    single-device engine is cross-program rounding, not nondeterminism)."""
+    assert mesh_report['deterministic']
+
+
+def test_zero_recompiles_after_warmup_on_mesh(mesh_report):
+    assert mesh_report['recompiles'] == {}
+
+
+def test_decode_overlap_on_mesh(mesh_report):
+    """Decode overlap defaults on for sharded engines and actually
+    overlaps (finished requests' decodes materialize behind later
+    ticks)."""
+    assert mesh_report['overlap_default_on']
+    assert mesh_report['overlapped_decodes'] > 0
+
+
+def test_elastic_resize_completes_in_flight(mesh_report):
+    """8 -> 4 mid-flight: the slot buffer shrinks to the per-device
+    budget, displaced requests park and re-enter, every request
+    completes; 4 -> 8 grows back."""
+    assert mesh_report['shrunk_slots'] == 4
+    assert mesh_report['resize_completed'] == mesh_report['resize_expected']
+    assert mesh_report['grown_slots'] == 8
+    assert mesh_report['grow_completed'] == 8
+    assert mesh_report['resizes'] == 2
+    assert mesh_report['devices_after'] == 8
+
+
+def test_shed_accounting_reconciles_on_mesh(mesh_report):
+    """No request is ever lost: completed + shed == offered, both for a
+    bounded queue and for service-time-aware expiry (where the shed
+    cause must be 'expired')."""
+    b = mesh_report['bounded']
+    assert b['completed'] + b['shed'] == b['offered']
+    assert b['shed'] > 0
+    e = mesh_report['expiry']
+    assert e['completed'] + e['shed'] == e['offered']
+    assert e['by_reason'].get('expired') == e['shed'] > 0
+
+
+# --- host-side plan/helper logic (no mesh needed) -------------------------
+
+def test_elastic_serving_plan():
+    assert elastic_serving_plan(8, 2) == ((8,), ('data',), 16)
+    assert elastic_serving_plan(3) == ((3,), ('data',), 3)
+    with pytest.raises(ValueError):
+        elastic_serving_plan(0)
+    with pytest.raises(ValueError):
+        elastic_serving_plan(4, 0)
+
+
+def test_align_slots():
+    assert align_slots(5, 4) == 8
+    assert align_slots(8, 4) == 8
+    assert align_slots(1, 1) == 1
+    with pytest.raises(ValueError):
+        align_slots(0, 4)
+    with pytest.raises(ValueError):
+        align_slots(4, 0)

@@ -203,3 +203,61 @@ def test_data_pipeline_deterministic_and_sharded():
     assert s0['tokens'].shape == (4, 16)
     assert not np.array_equal(np.asarray(s0['tokens']),
                               np.asarray(s1['tokens']))
+
+
+# ---------------------------------------------------------------------------
+# shard_hint / current_mesh (regression: the thread-resources fallback was
+# dead code because one try-block guarded both mesh probes)
+# ---------------------------------------------------------------------------
+
+def test_shard_hint_constrains_under_legacy_mesh_context():
+    """Inside a legacy ``with mesh:`` block, shard_hint must discover the
+    ambient mesh (via the pxla thread-resources probe on JAX releases
+    without ``get_abstract_mesh``) and lower to a real sharding
+    constraint — the HLO carries the constraint custom-call."""
+    out = _run_py('''
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.distributed．sharding import current_mesh, shard_hint
+        mesh = make_mesh((8,), ('data',))
+        assert current_mesh() is None         # no ambient mesh yet
+        with mesh:
+            assert current_mesh() is not None
+            assert 'data' in current_mesh().axis_names
+            fn = jax.jit(lambda x: shard_hint(x, 'data') * 2.0)
+            txt = fn.lower(
+                jax.ShapeDtypeStruct((16, 4), jnp.float32)).as_text()
+            assert 'Sharding' in txt, txt[:2000]
+            y = fn(jnp.ones((16, 4)))
+            assert 'data' in str(y.sharding.spec)
+        print('HINT-OK')
+    '''.replace('．', '.'))
+    assert 'HINT-OK' in out
+
+
+def test_shard_hint_explicit_mesh_outside_context():
+    """The serving engine passes its mesh explicitly from plain eager
+    code — no ``with mesh:`` anywhere — and the constraint must still
+    apply (concrete NamedSharding, not a bare PartitionSpec)."""
+    out = _run_py('''
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import serving_mesh
+        from repro.distributed．sharding import shard_hint
+        mesh = serving_mesh(8)
+        fn = jax.jit(lambda x: shard_hint(x, 'data', mesh=mesh) + 1.0)
+        y = fn(jnp.ones((8, 4)))
+        assert 'data' in str(y.sharding.spec), y.sharding
+        # non-dividing dims drop the axis instead of failing
+        z = jax.jit(lambda x: shard_hint(x, 'data', mesh=mesh))(
+            jnp.ones((6, 4)))
+        assert z.sharding.is_fully_replicated or \
+            'data' not in str(z.sharding.spec)
+        print('EXPLICIT-OK')
+    '''.replace('．', '.'))
+    assert 'EXPLICIT-OK' in out
+
+
+def test_shard_hint_identity_without_mesh():
+    from repro.distributed.sharding import shard_hint
+    x = jnp.ones((4, 4))
+    assert shard_hint(x, 'data') is x        # no ambient mesh: identity

@@ -194,3 +194,87 @@ def test_overload_factor_little_law():
     assert load == pytest.approx(1.0 * 10 * 0.1 + 4.0 * 10 * 0.025)
     with pytest.raises(ValueError):
         overload_factor(1.0, 0.1, 10, slots=0)
+
+
+# ---------------------------------------------------------------------------
+# SLO expiry fixes: expiry under EVERY policy, service-time-aware margin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.overload
+def test_has_deadlines_property():
+    q = AdmissionQueue()
+    assert not q.has_deadlines
+    q.submit(_req(0), now=0.0)                         # no SLO
+    assert not q.has_deadlines
+    q.submit(_req(1, slo_ms=100.0), now=0.0)
+    assert q.has_deadlines
+    q.expire(now=1.0)
+    assert not q.has_deadlines                         # only immortals left
+
+
+@pytest.mark.overload
+def test_expire_accepts_per_request_margin():
+    """margin_s may be a callable of the request — the engine passes its
+    estimated service time (steps x tick_s), so longer requests get a
+    larger will-miss margin."""
+    q = AdmissionQueue()
+    q.submit(_req(0, steps=2, slo_ms=1000.0), now=0.0)   # deadline 1.0
+    q.submit(_req(1, steps=50, slo_ms=1000.0), now=0.0)  # deadline 1.0
+    dead = q.expire(now=0.5, margin_s=lambda r: r.steps * 0.02)
+    # 50-step request needs 1.0s of service: 0.5 + 1.0 > deadline -> dead;
+    # the 2-step one (0.04s) still fits
+    assert [d.request.request_id for d in dead] == [1]
+    assert len(q) == 1
+
+
+@pytest.mark.overload
+def test_expiry_runs_under_reject_newest_policy(pipe):
+    """Regression: expiry used to run only when shed_policy was
+    'deadline-aware'.  The SLO is a property of the REQUEST — under the
+    default reject-newest policy (or an unbounded queue) a dead request
+    must still be shed at admission, never served."""
+    engine = ContinuousBatchingEngine(
+        pipe, slots=1, quality_probe=0,
+        queue=AdmissionQueue())                # default policy, unbounded
+    engine.warmup()
+    assert engine.submit(_req(0, steps=3), now=0.0)              # slot
+    assert engine.submit(_req(1, steps=3, slo_ms=1.0), now=0.0)  # queued
+    results = engine.run_until_idle(now=1.0, tick_dt=0.01)
+    assert [r.request_id for r in results] == [0]
+    assert engine.metrics.shed_by_reason == {'expired': 1}
+
+
+@pytest.mark.overload
+def test_admission_sheds_requests_that_will_miss_slo(pipe):
+    """A queued request whose deadline has NOT passed yet, but which
+    cannot finish inside it given the measured tick time, is shed at
+    admission instead of burning slot time on a guaranteed miss."""
+    engine = ContinuousBatchingEngine(
+        pipe, slots=1, quality_probe=0,
+        queue=AdmissionQueue(shed_policy='deadline-aware'))
+    engine.warmup()
+    assert engine.tick_s_estimate is None      # nothing measured yet
+    engine.tick_s_estimate = 10.0              # pinned: 10 s per tick
+    assert engine.submit(_req(0, steps=3), now=0.0)
+    # 5 s of slack left at admission, but 3 steps x 10 s/tick can't fit
+    assert engine.submit(_req(1, steps=3, slo_ms=5000.0), now=0.0)
+    results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+    assert [r.request_id for r in results] == [0]
+    assert engine.metrics.shed_by_reason == {'expired': 1}
+    # with no estimate the same request would have been served
+    engine2 = ContinuousBatchingEngine(
+        pipe, slots=1, quality_probe=0,
+        queue=AdmissionQueue(shed_policy='deadline-aware'))
+    engine2.warmup()
+    assert engine2.submit(_req(0, steps=3), now=0.0)
+    assert engine2.submit(_req(1, steps=3, slo_ms=5000.0), now=0.0)
+    assert len(engine2.run_until_idle(now=0.0, tick_dt=0.01)) == 2
+
+
+@pytest.mark.overload
+def test_measure_tick_s_feeds_estimate(pipe):
+    engine = ContinuousBatchingEngine(pipe, slots=2, quality_probe=0)
+    engine.warmup()
+    t = engine.measure_tick_s(steps=2)
+    assert t > 0.0
+    assert engine.tick_s_estimate == t
