@@ -34,8 +34,15 @@ unit is the physical/logical unit string):
                 serializes devices, so wall clock is emitted separately
                 as the audit trail), plus decode overlap on/off at 8
                 devices and a zero-recompile check
+  * obs_overhead — the observability tax: the same request batch served
+                with tracing off (NULL_TRACER) vs on (a live Tracer
+                recording every span); asserts the traced requests/s is
+                within 5% of untraced (best-of-3 each, so scheduler
+                noise does not fail the gate) and reports the per-run
+                event volume
 
-Rows persist to ``BENCH_PR9.json`` at the repo root.  Older
+Rows persist to ``BENCH_PR10.json`` at the repo root (NaN/inf values
+are sanitized to null — the file is strict JSON).  Older
 ``BENCH_PR*.json`` files used ``{name, us_per_call, derived}`` rows;
 ``load_bench`` reads both shapes.
 
@@ -639,6 +646,62 @@ def bench_overload(emit):
     emit('overload/slo', round(slo_ms, 1), 'ms')
 
 
+def bench_obs_overhead(emit):
+    """The observability tax: the SAME request batch served with tracing
+    disabled (the zero-cost NULL_TRACER default) and enabled (a live
+    ``Tracer`` recording submit/slot-assign/step/tick/decode/request
+    events).  Hot paths guard on ``tracer.enabled``, so the traced run
+    must stay within 5% of the untraced requests/s — asserted on the
+    best-of-3 makespans per mode so scheduler noise cannot fail the
+    gate.  Also reports the event volume one run records."""
+    import jax
+    from repro.diffusion.pipeline import DiffusionPipeline
+    from repro.models.unet import UNetConfig
+    from repro.obs import Tracer
+    from repro.serving import ContinuousBatchingEngine, GenerationRequest
+    cfg = UNetConfig('bench-obs', img_size=16, in_ch=3, base_ch=32,
+                     ch_mults=(1, 2), n_res_blocks=1, attn_resolutions=(8,),
+                     n_heads=4, timesteps=50)
+    pipe = DiffusionPipeline.init(jax.random.PRNGKey(0), cfg)
+    N, slots, steps, reps = 10, 4, 6, 3
+    engine = ContinuousBatchingEngine(pipe, slots=slots, quality_probe=0)
+    engine.warmup()
+
+    def serve(tracer):
+        from repro.obs import NULL_TRACER
+        saved = engine.tracer
+        engine.tracer = tracer if tracer is not None else NULL_TRACER
+        for i in range(N):
+            engine.submit(GenerationRequest(
+                request_id=i, seed=300 + i, steps=steps, exit_tol=0.0),
+                now=0.0)
+        t0 = time.perf_counter()
+        results = engine.run_until_idle(now=0.0, tick_dt=0.01)
+        makespan = time.perf_counter() - t0
+        engine.tracer = saved
+        assert len(results) == N
+        return makespan
+
+    # interleave modes so drift (thermal, background load) hits both
+    plain_times, traced_times, tracers = [], [], []
+    for _ in range(reps):
+        plain_times.append(serve(None))
+        tracers.append(Tracer())
+        traced_times.append(serve(tracers[-1]))
+    plain, traced = min(plain_times), min(traced_times)
+    events = max(len(tr) for tr in tracers)
+    plain_rps, traced_rps = N / plain, N / traced
+    overhead = max(0.0, 1.0 - traced_rps / plain_rps)
+    assert overhead < 0.05, \
+        f'tracing overhead {overhead:.1%} >= 5% ' \
+        f'({plain_rps:.2f} -> {traced_rps:.2f} req/s)'
+    emit('obs_overhead/untraced_rps', round(plain_rps, 3), 'req/s')
+    emit('obs_overhead/traced_rps', round(traced_rps, 3), 'req/s')
+    emit('obs_overhead/overhead', round(overhead, 4), 'fraction')
+    emit('obs_overhead/events_per_run', events, 'events')
+    emit('obs_overhead/events_per_request', round(events / N, 1), 'events')
+
+
 SECTIONS = {
     'table1': bench_table1,
     'fig8': bench_fig8,
@@ -652,10 +715,11 @@ SECTIONS = {
     'coldstart': bench_coldstart,
     'overload': bench_overload,
     'sharded_serving': bench_sharded_serving,
+    'obs_overhead': bench_obs_overhead,
 }
 
 ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), '..')
-BENCH_JSON = os.path.join(ROOT, 'BENCH_PR9.json')
+BENCH_JSON = os.path.join(ROOT, 'BENCH_PR10.json')
 
 
 def load_bench(path):
@@ -776,10 +840,14 @@ def main() -> None:
         _, ok = check_regression(rows, fail=True)
         sys.exit(0 if ok else 1)
     check_regression(rows)
+    # strict JSON on disk: a NaN/inf value (e.g. an unprobed PSNR mean)
+    # becomes null instead of a bare NaN token no parser accepts
+    from repro.obs.export import sanitize
+    doc = sanitize({'sections': names,
+                    'rows': [{'name': n, 'value': v, 'unit': u}
+                             for n, v, u in rows]})
     with open(BENCH_JSON, 'w') as f:
-        json.dump({'sections': names,
-                   'rows': [{'name': n, 'value': v, 'unit': u}
-                            for n, v, u in rows]}, f, indent=2)
+        json.dump(doc, f, indent=2, allow_nan=False)
         f.write('\n')
     sys.stderr.write(f'[benchmarks] {len(rows)} rows -> {BENCH_JSON}\n')
 

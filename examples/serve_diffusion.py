@@ -71,6 +71,11 @@ def main():
                          '(None/0 = off)')
     ap.add_argument('--exit-patience', type=int, default=2,
                     help='consecutive converged ticks before draining')
+    ap.add_argument('--trace', default=None, metavar='PATH',
+                    help='record per-request tracing and write a Chrome/'
+                         'Perfetto trace_event timeline here')
+    ap.add_argument('--log-json', default=None, metavar='PATH',
+                    help='write the structured JSONL event log here')
     args = ap.parse_args()
     precision = 'fp32' if args.fp32 else args.precision
 
@@ -97,11 +102,16 @@ def main():
     # --- continuous batching over a staggered trace ----------------------
     # quality probe off for the throughput race; see --help of
     # repro.launch.serve for the probed frontier report
+    tracer = None
+    if args.trace or args.log_json:
+        from repro.obs import Tracer
+        tracer = Tracer()
     engine = ContinuousBatchingEngine(pipe, slots=args.slots,
                                       quality_probe=0,
                                       cache_interval=args.cache_interval,
                                       exit_tol=args.exit_tol,
-                                      exit_patience=args.exit_patience)
+                                      exit_patience=args.exit_patience,
+                                      tracer=tracer)
     print('[engine] warmup (compile)...', flush=True)
     engine.warmup(precisions=(precision,))
     # arrivals spread over one baseline service window: batch-at-once can
@@ -136,6 +146,14 @@ def main():
     print(f'[energy]   {s["energy_per_request_mj"]:.2f} mJ/request '
           f'({s["total_energy_mj"]:.1f} mJ total, {src} '
           f'@ {results[0].epb_pj:.3f} pJ/bit, precision={precision})')
+    if tracer is not None:
+        from repro.obs import write_chrome_trace, write_jsonl
+        if args.trace:
+            n = write_chrome_trace(tracer, args.trace)
+            print(f'[obs]      chrome trace: {n} events -> {args.trace}')
+        if args.log_json:
+            n = write_jsonl(tracer, args.log_json)
+            print(f'[obs]      event log: {n} lines -> {args.log_json}')
 
 
 if __name__ == '__main__':

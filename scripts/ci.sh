@@ -13,8 +13,10 @@
 #      shedding, deadline expiry, persistent compilation cache, restart
 #   6. dist serving lane (-m dist_serving): the slot-sharded engine on
 #      an 8-device simulated mesh (parity, elastic resize, overlap)
-#   7. full tier-1 suite
-#   8. bench regression gate: serving/engine_rps must stay within
+#   7. obs lane (-m obs): tracer semantics, exporters (strict JSON),
+#      Prometheus exposition, trace <-> metrics reconciliation
+#   8. full tier-1 suite
+#   9. bench regression gate: serving/engine_rps must stay within
 #      BENCH_TOL (default 10%) of the newest committed BENCH_PR*.json
 #
 # CI_SMOKE_ONLY=1 stops after stage 2 (pre-push hook scale).
@@ -24,10 +26,10 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="$PWD/scripts/ci_stubs:$PWD/src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS=cpu
 
-echo '== [1/8] collection (hypothesis absent) =='
+echo '== [1/9] collection (hypothesis absent) =='
 python -m pytest -q --collect-only >/dev/null
 
-echo '== [2/8] smoke lane =='
+echo '== [2/9] smoke lane =='
 python -m pytest -q -m smoke
 
 if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
@@ -35,20 +37,23 @@ if [ "${CI_SMOKE_ONLY:-0}" = "1" ]; then
     exit 0
 fi
 
-echo '== [3/8] quant serving lane =='
+echo '== [3/9] quant serving lane =='
 python -m pytest -q -m quant
 
-echo '== [4/8] sched lane =='
+echo '== [4/9] sched lane =='
 python -m pytest -q -m "sched and smoke"
 
-echo '== [5/8] hardening lane (overload + coldstart) =='
+echo '== [5/9] hardening lane (overload + coldstart) =='
 python -m pytest -q -m "overload or coldstart"
 
-echo '== [6/8] dist serving lane (8-device simulated mesh) =='
+echo '== [6/9] dist serving lane (8-device simulated mesh) =='
 python -m pytest -q -m dist_serving
 
-echo '== [7/8] full tier-1 =='
+echo '== [7/9] obs lane (tracing, exporters, exposition) =='
+python -m pytest -q -m obs
+
+echo '== [8/9] full tier-1 =='
 python -m pytest -q
 
-echo '== [8/8] bench regression gate =='
+echo '== [9/9] bench regression gate =='
 python benchmarks/run.py serving --check

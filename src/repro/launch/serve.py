@@ -49,10 +49,29 @@ eviction.  Simulate a mesh on CPU with
     PYTHONPATH=src python -m repro.launch.serve --diffusion \
         --devices 8 --slots-per-device 1 --requests 16 --rate 8 \
         --steps 6 --resize-to 4 --resize-after 4
+
+Observability (``repro.obs``): ``--trace PATH`` records every request's
+lifecycle (submit -> slot assign -> per-tick steps -> early exit ->
+decode -> complete, plus sheds, warmup, resizes, stragglers) and writes
+a Chrome/Perfetto ``trace_event`` timeline; ``--log-json PATH`` writes
+the same events as a grep-able JSONL structured log; ``--prom PATH``
+dumps the Prometheus text exposition of the final counters; and
+``--report-every S`` prints an in-run metrics snapshot line every S
+seconds.  After a traced replay the trace is reconciled against
+``ServingMetrics`` (same completed/shed counts, identical latencies)
+before it is written.  ``--log-level`` tunes verbosity; log lines keep
+their ``[serve]`` / ``[mesh]`` / ``[overload]`` prefixes as logger
+names:
+
+    PYTHONPATH=src python -m repro.launch.serve --diffusion \
+        --requests 8 --rate 4 --slots 4 --steps 6 \
+        --trace /tmp/serve-trace.json --log-json /tmp/serve-events.jsonl
 """
 from __future__ import annotations
 
 import argparse
+import logging
+import sys
 import time
 
 import jax
@@ -63,6 +82,29 @@ from repro.configs.registry import get, smoke_config
 from repro.distributed import sharding as SH
 from repro.launch import steps as ST
 from repro.launch.mesh import make_mesh
+
+log_serve = logging.getLogger('serve')
+log_mesh = logging.getLogger('mesh')
+log_coldstart = logging.getLogger('coldstart')
+log_overload = logging.getLogger('overload')
+log_elastic = logging.getLogger('elastic')
+log_sched = logging.getLogger('sched')
+log_energy = logging.getLogger('energy')
+log_frontier = logging.getLogger('frontier')
+log_obs = logging.getLogger('obs')
+
+
+def setup_logging(level: str = 'info', stream=None) -> None:
+    """Leveled stdout logging with the historical ``[tag]`` prefixes:
+    each subsystem logs through its own logger (``serve``, ``mesh``,
+    ``overload``, ...) and the formatter renders the logger name as the
+    line prefix, so ``--log-level debug`` tunes verbosity without
+    changing the grep-able output shape."""
+    logging.basicConfig(
+        level=getattr(logging, level.upper()),
+        format='[%(name)s] %(message)s',
+        stream=stream if stream is not None else sys.stdout,
+        force=True)
 
 
 def serve_lm(cfg, mesh, batch: int, prompt_len: int, new_tokens: int,
@@ -94,9 +136,9 @@ def serve_lm(cfg, mesh, batch: int, prompt_len: int, new_tokens: int,
         t_decode = time.perf_counter() - t0
     seqs = jnp.concatenate(out, axis=1)
     tps = batch * (new_tokens - 1) / max(t_decode, 1e-9)
-    print(f'[serve] prefill {prompt_len} toks x{batch}: {t_prefill:.3f}s; '
-          f'decode {new_tokens-1} steps: {t_decode:.3f}s '
-          f'({tps:.1f} tok/s)')
+    log_serve.info('prefill %d toks x%d: %.3fs; decode %d steps: %.3fs '
+                   '(%.1f tok/s)', prompt_len, batch, t_prefill,
+                   new_tokens - 1, t_decode, tps)
     return seqs
 
 
@@ -120,7 +162,9 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                     queue_depth=None, shed_policy: str = 'reject-newest',
                     overload: float = 0.0, devices=None,
                     slots_per_device=None, overlap_decode=None,
-                    resize_to=None, resize_after=None, cache_max_mb=None):
+                    resize_to=None, resize_after=None, cache_max_mb=None,
+                    trace_path=None, log_json_path=None, prom_path=None,
+                    report_every=None):
     """Replay a Poisson arrival trace through the continuous-batching
     engine and print the serving + energy report, plus the per-policy
     accuracy-vs-EPB frontier.  ``cache_interval > 1`` enables
@@ -138,9 +182,17 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
 
     ``devices`` shards the slot axis over a 1-D mesh of the first N
     visible devices; ``resize_to``/``resize_after`` demo the elastic
-    path by resizing the mesh mid-replay after K completions."""
+    path by resizing the mesh mid-replay after K completions.
+
+    ``trace_path`` / ``log_json_path`` enable per-request tracing and
+    write the Chrome-trace timeline / JSONL structured log after the
+    replay (reconciled against the metrics first); ``prom_path`` dumps
+    the final Prometheus text exposition; ``report_every`` emits an
+    in-run snapshot line every that-many seconds."""
     from repro.diffusion.pipeline import DiffusionPipeline
     from repro.models.unet import UNetConfig
+    from repro.obs import (SnapshotReporter, Tracer, render_exposition,
+                           write_chrome_trace, write_jsonl)
     from repro.serving import (AdmissionQueue, ContinuousBatchingEngine,
                                cache_entries, enable_persistent_cache,
                                overload_factor)
@@ -160,6 +212,18 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     if devices is not None:
         from repro.launch.mesh import serving_mesh
         mesh = serving_mesh(n_devices=devices)
+    tracer = Tracer() if (trace_path or log_json_path) else None
+    reporter = None
+    if report_every is not None and report_every > 0:
+        reporter = SnapshotReporter(interval_s=report_every,
+                                    emit=log_obs.info)
+
+    def _on_straggler(report):
+        log_mesh.warning('straggler flagged: hosts %s (median %.1fms, '
+                         'threshold %.1fms) — %s', list(report.slow_hosts),
+                         report.median_s * 1e3, report.threshold_s * 1e3,
+                         report.recommendation)
+
     engine = ContinuousBatchingEngine(pipe, slots=slots, queue=queue,
                                       quality_probe=quality_probe,
                                       cache_interval=cache_interval,
@@ -167,30 +231,31 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
                                       exit_patience=exit_patience,
                                       mesh=mesh,
                                       slots_per_device=slots_per_device,
-                                      overlap_decode=overlap_decode)
+                                      overlap_decode=overlap_decode,
+                                      tracer=tracer, reporter=reporter,
+                                      on_straggler=_on_straggler
+                                      if mesh is not None else None)
     if mesh is not None:
-        print(f'[mesh] slot axis sharded over {devices} devices: '
-              f'{engine.slots} slots '
-              f'({engine.slots // devices}/device), '
-              f'overlap_decode={engine.overlap_decode}', flush=True)
+        log_mesh.info('slot axis sharded over %d devices: %d slots '
+                      '(%d/device), overlap_decode=%s', devices,
+                      engine.slots, engine.slots // devices,
+                      engine.overlap_decode)
     if cache_dir and cache_max_mb is not None:
         # enable with the size bound BEFORE warmup re-enables it (the
         # bound is process state the engine's trim_cache calls enforce)
         enable_persistent_cache(cache_dir,
                                 max_bytes=int(cache_max_mb * 2 ** 20))
     entries_before = cache_entries(cache_dir) if cache_dir else 0
-    print(f'[serve] warmup (compile, policy={precision}'
-          + (f', cache_dir={cache_dir}' if cache_dir else '') + ')...',
-          flush=True)
+    log_serve.info('warmup (compile, policy=%s%s)...', precision,
+                   f', cache_dir={cache_dir}' if cache_dir else '')
     warmup_s = engine.warmup(precisions=(precision,), cache_dir=cache_dir)
     if cache_dir:
         entries = cache_entries(cache_dir)
         state = 'warm (loaded from cache)' if entries_before > 0 \
             else f'cold (persisted {entries} executables)'
-        print(f'[coldstart] warmup {warmup_s:.2f}s — {state}', flush=True)
+        log_coldstart.info('warmup %.2fs — %s', warmup_s, state)
     else:
-        print(f'[coldstart] warmup {warmup_s:.2f}s (no persistent cache)',
-              flush=True)
+        log_coldstart.info('warmup %.2fs (no persistent cache)', warmup_s)
     if overload > 0:
         tick_s = engine.measure_tick_s(steps=steps)
         capacity_rps = slots / (steps * tick_s)
@@ -199,11 +264,12 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
             # default SLO: 3x the zero-queue service time — generous for
             # an uncontended request, certain to shed under overload
             slo_ms = 3.0 * steps * tick_s * 1e3
-        print(f'[overload] measured capacity {capacity_rps:.2f} req/s '
-              f'({tick_s * 1e3:.1f} ms/tick) -> offering '
-              f'{rate_hz:.2f} req/s = {overload_factor(rate_hz, tick_s, steps, slots):.1f}x, '
-              f'queue_depth={queue_depth}, slo={slo_ms:.0f}ms, '
-              f'shed_policy={shed_policy}', flush=True)
+        log_overload.info(
+            'measured capacity %.2f req/s (%.1f ms/tick) -> offering '
+            '%.2f req/s = %.1fx, queue_depth=%s, slo=%.0fms, '
+            'shed_policy=%s', capacity_rps, tick_s * 1e3, rate_hz,
+            overload_factor(rate_hz, tick_s, steps, slots), queue_depth,
+            slo_ms, shed_policy)
     trace = poisson_trace(n_requests, rate_hz, steps, seed, slo_ms=slo_ms,
                           precision=precision)
     sched = []
@@ -211,9 +277,10 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
         sched.append(f'cache_interval={cache_interval}')
     if exit_tol is not None and exit_tol > 0:
         sched.append(f'exit_tol={exit_tol:g} patience={exit_patience}')
-    print(f'[serve] replaying {n_requests} requests at {rate_hz:.1f} req/s '
-          f'({engine.slots} slots, {steps} DDIM steps, precision={precision}'
-          + (', ' + ', '.join(sched) if sched else '') + ')', flush=True)
+    log_serve.info('replaying %d requests at %.1f req/s (%d slots, %d '
+                   'DDIM steps, precision=%s%s)', n_requests, rate_hz,
+                   engine.slots, steps, precision,
+                   ', ' + ', '.join(sched) if sched else '')
     resize_state = {'done': 0, 'fired': False, 'flushed': []}
 
     def _on_result(res):
@@ -222,13 +289,13 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
         if (resize_to is not None and not resize_state['fired']
                 and resize_state['done'] >= k):
             resize_state['fired'] = True
-            print(f'[elastic] {resize_state["done"]} done -> resizing '
-                  f'{devices} -> {resize_to} devices mid-replay', flush=True)
+            log_elastic.info('%d done -> resizing %s -> %d devices '
+                             'mid-replay', resize_state['done'], devices,
+                             resize_to)
             resize_state['flushed'].extend(engine.elastic_resize(
                 n_devices=resize_to, precisions=(precision,)))
-            print(f'[elastic] rebuilt: {engine.slots} slots on '
-                  f'{resize_to} devices, {len(engine._parked)} parked',
-                  flush=True)
+            log_elastic.info('rebuilt: %d slots on %d devices, %d parked',
+                             engine.slots, resize_to, len(engine._parked))
 
     t0 = time.perf_counter()
     results = engine.replay(
@@ -237,38 +304,37 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
     makespan = time.perf_counter() - t0
     if engine.monitor is not None:
         report = engine.monitor.check()
-        print('[mesh] stragglers: '
-              + (report.recommendation if report else 'none detected'),
-              flush=True)
+        log_mesh.info('stragglers: %s',
+                      report.recommendation if report else 'none detected')
     s = engine.metrics.summary()
-    print(f'[serve] {len(results)} done in {makespan:.2f}s '
-          f'({s["requests_per_s"]:.2f} req/s) '
-          f'p50={s["p50_latency_ms"]:.0f}ms p95={s["p95_latency_ms"]:.0f}ms '
-          f'slo_viol={int(s["slo_violations"])} shed={int(s["shed"])}')
+    log_serve.info('%d done in %.2fs (%.2f req/s) p50=%.0fms p95=%.0fms '
+                   'p99=%.0fms slo_viol=%d shed=%d', len(results),
+                   makespan, s['requests_per_s'], s['p50_latency_ms'],
+                   s['p95_latency_ms'], s['p99_latency_ms'],
+                   int(s['slo_violations']), int(s['shed']))
     if overload > 0 or s['shed'] > 0:
         m = engine.metrics
         by = dict(m.shed_by_reason)
-        print(f'[overload] survived: queue peaked at '
-              f'{int(s["max_queue_depth"])}'
-              + (f'/{queue_depth}' if queue_depth is not None else '')
-              + f', shed {int(s["shed"])}/{n_requests} '
-              f'(queue_full={by.get("queue_full", 0)} '
-              f'evicted={by.get("deadline_evict", 0)} '
-              f'expired={by.get("expired", 0)}), queue wait '
-              f'p50={s["p50_queue_wait_ms"]:.0f}ms '
-              f'p99={s["p99_queue_wait_ms"]:.0f}ms', flush=True)
+        log_overload.info(
+            'survived: queue peaked at %d%s, shed %d/%d (queue_full=%d '
+            'evicted=%d expired=%d), queue wait p50=%.0fms p99=%.0fms',
+            int(s['max_queue_depth']),
+            f'/{queue_depth}' if queue_depth is not None else '',
+            int(s['shed']), n_requests, by.get('queue_full', 0),
+            by.get('deadline_evict', 0), by.get('expired', 0),
+            s['p50_queue_wait_ms'], s['p99_queue_wait_ms'])
         assert len(results) + int(s['shed']) == n_requests, \
             'requests lost: completed + shed != offered'
         if queue_depth is not None:
             assert s['max_queue_depth'] <= queue_depth, 'queue bound broken'
     if cache_interval > 1 or s['steps_saved'] > 0:
-        print(f'[sched] cache_hit_rate={s["cache_hit_rate"]:.2f} '
-              f'early_exits={int(s["early_exits"])} '
-              f'steps_saved={int(s["steps_saved"])}')
+        log_sched.info('cache_hit_rate=%.2f early_exits=%d steps_saved=%d',
+                       s['cache_hit_rate'], int(s['early_exits']),
+                       int(s['steps_saved']))
     src = 'simulated DiffLight' if precision != 'fp32' \
         else 'GPU digital baseline'
-    print(f'[energy] {s["energy_per_request_mj"]:.2f} mJ/request '
-          f'({s["total_energy_mj"]:.1f} mJ total, {src})')
+    log_energy.info('%.2f mJ/request (%.1f mJ total, %s)',
+                    s['energy_per_request_mj'], s['total_energy_mj'], src)
     for name, pt in engine.metrics.frontier().items():
         quality = '' if pt['probed'] == 0 else (
             f'  psnr={pt["mean_psnr_db"]:.1f}dB mse={pt["mean_mse"]:.2e}'
@@ -278,10 +344,46 @@ def serve_diffusion(img: int, steps: int, n_requests: int, rate_hz: float,
             sched_cols = (f'  hit_rate={pt["cache_hit_rate"]:.2f}'
                           f' steps={pt["mean_steps_executed"]:.1f}'
                           f'/{pt["mean_steps_requested"]:.1f}')
-        print(f'[frontier] {name}: {pt["mean_epb_pj"]:.3f} pJ/bit  '
-              f'{pt["mean_energy_j"] * 1e3:.2f} mJ/request'
-              f'{sched_cols}{quality}')
+        log_frontier.info('%s: %.3f pJ/bit  %.2f mJ/request%s%s', name,
+                          pt['mean_epb_pj'], pt['mean_energy_j'] * 1e3,
+                          sched_cols, quality)
+    if tracer is not None:
+        _reconcile_trace(tracer, engine)
+        if trace_path:
+            n = write_chrome_trace(tracer, trace_path)
+            log_obs.info('chrome trace: %d events -> %s (open in '
+                         'chrome://tracing or ui.perfetto.dev)', n,
+                         trace_path)
+        if log_json_path:
+            n = write_jsonl(tracer, log_json_path)
+            log_obs.info('structured event log: %d lines -> %s', n,
+                         log_json_path)
+    if prom_path:
+        with open(prom_path, 'w') as f:
+            f.write(render_exposition(engine.metrics))
+        log_obs.info('prometheus exposition -> %s', prom_path)
     return results
+
+
+def _reconcile_trace(tracer, engine) -> None:
+    """Assert the trace agrees with the metrics ledger before export:
+    one request span per completed request (with the span duration equal
+    to the result latency by construction — spans are stamped from the
+    result's own timing fields), one shed instant per shed request."""
+    m = engine.metrics
+    spans = tracer.spans('request')
+    assert len(spans) == m.completed, \
+        f'trace/metrics drift: {len(spans)} request spans vs ' \
+        f'{m.completed} completed'
+    sheds = tracer.select('shed')
+    total_shed = sum(m.shed_by_reason.values())
+    assert len(sheds) == total_shed, \
+        f'trace/metrics drift: {len(sheds)} shed events vs ' \
+        f'{total_shed} shed requests'
+    log_obs.info('trace reconciled: %d request spans == %d completed, '
+                 '%d shed events == %d shed (%d events total)',
+                 len(spans), m.completed, len(sheds), total_shed,
+                 len(tracer))
 
 
 def main():
@@ -358,7 +460,25 @@ def main():
     ap.add_argument('--cache-max-mb', type=float, default=None,
                     help='bound the persistent compilation cache; '
                          'least-recently-used executables are evicted')
+    ap.add_argument('--log-level', default='info',
+                    choices=['debug', 'info', 'warning', 'error'],
+                    help='stdout logging verbosity')
+    ap.add_argument('--trace', default=None, metavar='PATH',
+                    help='record per-request tracing and write a Chrome/'
+                         'Perfetto trace_event timeline here (diffusion '
+                         'mode)')
+    ap.add_argument('--log-json', default=None, metavar='PATH',
+                    help='write the structured JSONL event log here '
+                         '(diffusion mode; same events as --trace)')
+    ap.add_argument('--prom', default=None, metavar='PATH',
+                    help='write the final Prometheus text exposition of '
+                         'the serving metrics here (diffusion mode)')
+    ap.add_argument('--report-every', type=float, default=None,
+                    metavar='SECONDS',
+                    help='print an in-run metrics snapshot line every '
+                         'this many seconds (diffusion mode)')
     args = ap.parse_args()
+    setup_logging(args.log_level)
     if args.diffusion:
         precision = args.precision or ('w8a8' if args.w8a8 else 'fp32')
         serve_diffusion(args.img, args.steps, args.requests, args.rate,
@@ -377,14 +497,18 @@ def main():
                         else args.overlap_decode == 'on',
                         resize_to=args.resize_to,
                         resize_after=args.resize_after,
-                        cache_max_mb=args.cache_max_mb)
+                        cache_max_mb=args.cache_max_mb,
+                        trace_path=args.trace,
+                        log_json_path=args.log_json,
+                        prom_path=args.prom,
+                        report_every=args.report_every)
         return
     cfg = smoke_config(args.arch) if args.preset == 'smoke' \
         else get(args.arch)
     mesh = make_mesh((1, 1), ('data', 'model'))
     seqs = serve_lm(cfg, mesh, args.batch, args.prompt, args.tokens,
                     quant=args.w8a8)
-    print('[serve] sample token ids:', np.asarray(seqs[0, :12]))
+    log_serve.info('sample token ids: %s', np.asarray(seqs[0, :12]))
 
 
 if __name__ == '__main__':

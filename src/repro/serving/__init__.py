@@ -24,7 +24,8 @@ from repro.serving.api import GenerationRequest, GenerationResult
 from repro.serving.batcher import (Bucket, BucketRouter, align_slots,
                                    bucket_for, choose_slots,
                                    group_by_precision, offered_load,
-                                   overload_factor, split_cache_phase)
+                                   overload_factor, plan_tick,
+                                   split_cache_phase)
 from repro.serving.compile_cache import (active_cache_dir, cache_entries,
                                          cache_evictions,
                                          disable_persistent_cache,
@@ -41,7 +42,7 @@ __all__ = [
     'PhotonicAccountant', 'PrecisionPolicy', 'FrontierPoint',
     'Bucket', 'BucketRouter', 'bucket_for', 'align_slots', 'choose_slots',
     'group_by_precision', 'offered_load', 'overload_factor',
-    'split_cache_phase',
+    'plan_tick', 'split_cache_phase',
     'enable_persistent_cache', 'disable_persistent_cache',
     'active_cache_dir', 'cache_entries', 'cache_evictions', 'trim_cache',
 ]

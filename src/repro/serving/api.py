@@ -53,6 +53,13 @@ class GenerationRequest:
     ``||x0_t - x0_{t-1}|| / ||x0_{t-1}||``, stays below ``exit_tol`` for
     ``exit_patience`` consecutive ticks.  ``exit_tol <= 0`` disables
     early exit for this request.
+
+    ``trace_id`` — opaque caller-provided correlation id threaded
+    through to the ``GenerationResult`` and every trace event the
+    observability layer records for this request (None: the engine
+    derives ``req-<request_id>``).  ``request_id`` stays the engine's
+    primary key; ``trace_id`` exists so an upstream gateway can stitch
+    serving spans into its own distributed trace.
     """
     request_id: int
     seed: int
@@ -65,6 +72,13 @@ class GenerationRequest:
     cache_interval: Optional[int] = None
     exit_tol: Optional[float] = None
     exit_patience: Optional[int] = None
+    trace_id: Optional[str] = None
+
+    @property
+    def effective_trace_id(self) -> str:
+        """The caller's ``trace_id``, or the derived default."""
+        return self.trace_id if self.trace_id is not None \
+            else f'req-{self.request_id}'
 
     def __post_init__(self):
         if self.steps < 1:
@@ -117,6 +131,7 @@ class GenerationResult:
     full_evals: int = 0            # full-UNet denoise ticks consumed
     cached_evals: int = 0          # shallow (DeepCache skip) ticks consumed
     early_exit: bool = False       # drained by x0-convergence early exit
+    trace_id: Optional[str] = None  # correlation id (request's, or derived)
 
     @property
     def steps_saved(self) -> int:

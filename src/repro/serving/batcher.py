@@ -74,6 +74,35 @@ def split_cache_phase(mask: np.ndarray,
     return mask & needs_refresh, mask & ~needs_refresh
 
 
+def plan_tick(precisions: Sequence[Optional[str]],
+              needs_refresh: np.ndarray,
+              caching: bool) -> 'List[tuple[str, bool, np.ndarray]]':
+    """The ordered step-dispatch plan for one engine tick.
+
+    Returns ``[(precision, refresh, mask), ...]`` — one entry per
+    pre-compiled step call the tick must issue: occupied slots grouped
+    by precision (``group_by_precision``), each group split into its
+    refresh/skip submasks when DeepCache phasing is on
+    (``split_cache_phase``); empty submasks are dropped.  Without
+    caching every entry is a full pass (``refresh=True``).  Precisions
+    dispatch in sorted order so the plan — and therefore the trace
+    events tagged from it — is deterministic for a given slot state.
+    """
+    plan: 'List[tuple[str, bool, np.ndarray]]' = []
+    groups = group_by_precision(precisions)
+    for pname in sorted(groups):
+        mask = groups[pname]
+        if caching:
+            r_m, s_m = split_cache_phase(mask, needs_refresh)
+            pairs = ((True, r_m), (False, s_m))
+        else:
+            pairs = ((True, mask),)
+        for refresh, m in pairs:
+            if m.any():
+                plan.append((pname, refresh, m))
+    return plan
+
+
 def align_slots(slots: int, n_shards: int) -> int:
     """Round a slot count up to a multiple of the mesh's slot-axis shard
     count, so the engine's ``(slots, H, W, C)`` latent buffer divides

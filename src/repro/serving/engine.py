@@ -112,6 +112,23 @@ at fp32 OR w8a8 — is numerically identical to running
 policy=...)`` on its own (tests pin this at atol 1e-5).  ``w8a8+noise``
 is deterministic under the engine's noise seed: two engines with the same
 seed and request sequence produce identical images.
+
+Observability (``repro.obs``): construct with ``tracer=Tracer()`` and
+the engine records every request's lifecycle — submit, shed (with the
+specific victim, via the queue's ``on_shed`` hook), slot assignment,
+one span per step dispatch tagged (precision, refresh|skip, guided)
+with its PhotonicAccountant energy delta, early exit, decode dispatch /
+overlapped completion, and a submit-to-finish request span stamped from
+the SAME timing fields the metrics use (so trace and metrics reconcile
+exactly) — plus engine-global events (warmup, AOT lowering, elastic
+resize, straggler flags) and a per-tick occupancy counter.  The default
+is the no-op ``NULL_TRACER``; every hot-path hook guards on
+``tracer.enabled``, so an untraced engine builds no event objects.
+``on_straggler=`` registers a callback the ``StepMonitor`` fires when
+its flagged-device set changes — the hook a deployment uses to trigger
+``elastic_resize`` from measured straggle instead of a fixed schedule.
+``engine.reporter`` (a ``SnapshotReporter``) emits periodic in-run
+metric lines, checked once per tick.
 """
 from __future__ import annotations
 
@@ -133,9 +150,9 @@ from repro.distributed.fault_tolerance import (StepMonitor,
                                                elastic_serving_plan)
 from repro.distributed.sharding import named, shard_hint
 from repro.models import autoencoder as AE
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serving.api import GenerationRequest, GenerationResult
-from repro.serving.batcher import (align_slots, group_by_precision,
-                                   split_cache_phase)
+from repro.serving.batcher import align_slots, plan_tick
 from repro.serving.compile_cache import trim_cache
 from repro.serving.metrics import PhotonicAccountant, ServingMetrics
 from repro.serving.queue import AdmissionQueue, Queued
@@ -171,6 +188,7 @@ class _Pending:
     now: float
     wall_clock: bool
     early: bool
+    slot: int = -1               # slot the request drained from (tracing)
 
 
 class ContinuousBatchingEngine:
@@ -187,7 +205,10 @@ class ContinuousBatchingEngine:
                  exit_min_steps: int = 2,
                  mesh: Optional[Mesh] = None,
                  slots_per_device: Optional[int] = None,
-                 overlap_decode: Optional[bool] = None):
+                 overlap_decode: Optional[bool] = None,
+                 tracer: Optional[Tracer] = None,
+                 on_straggler=None,
+                 reporter=None):
         """``noise_model`` / ``noise_seed`` configure the ``w8a8+noise``
         policy (defaults: the paper's analog perturbation model, seed 0).
         ``quality_probe``: run the full-step fp32 reference + PSNR/MSE
@@ -209,7 +230,14 @@ class ContinuousBatchingEngine:
         (the invariant ``elastic_resize`` preserves); otherwise ``slots``
         is rounded up to divide the mesh.  ``overlap_decode`` (default:
         on exactly when sharded) pipelines drained requests' VAE decodes
-        behind the next denoise tick."""
+        behind the next denoise tick.
+
+        ``tracer``: a ``repro.obs.Tracer`` recording the lifecycle /
+        engine event stream (default: the zero-cost ``NULL_TRACER``).
+        ``on_straggler``: callback fired with a ``StragglerReport``
+        whenever the ``StepMonitor``'s flagged-device set changes.
+        ``reporter``: a ``repro.obs.SnapshotReporter`` polled once per
+        tick for periodic in-run metric lines."""
         if slots < 1:
             raise ValueError('need at least one slot')
         if cache_interval < 1:
@@ -240,6 +268,15 @@ class ContinuousBatchingEngine:
         # (len() == 0), and `or` would silently drop its depth bound
         self.queue = queue if queue is not None else AdmissionQueue()
         self.metrics = metrics if metrics is not None else ServingMetrics()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.on_straggler = on_straggler
+        self.reporter = reporter
+        self._straggler_flagged: Tuple[int, ...] = ()
+        # shed attribution rides the queue's per-request hook (chained if
+        # the caller installed one): the queue knows WHICH request each
+        # shed dropped, so metrics and trace carry the victim's id
+        self._user_on_shed = self.queue.on_shed
+        self.queue.on_shed = self._queue_shed
         if mesh is not None:
             self.metrics.devices = int(mesh.shape['data'])
         self.photonic = photonic or (
@@ -537,20 +574,78 @@ class ContinuousBatchingEngine:
         except Exception:                          # pragma: no cover
             return -1
 
+    # -- observability -----------------------------------------------------
+    #: queue shed causes -> the metrics ledger's reason names
+    _SHED_REASONS = {'rejected': 'queue_full', 'evicted': 'deadline_evict',
+                     'expired': 'expired'}
+
+    def _queue_shed(self, reason: str, req: GenerationRequest,
+                    now: float) -> None:
+        """Per-request shed hook the ``AdmissionQueue`` fires: tally the
+        cause in the metrics and attribute the shed to its request id in
+        the trace."""
+        self.metrics.record_shed(self._SHED_REASONS.get(reason, reason))
+        if self.tracer.enabled:
+            self.tracer.instant('shed', cat='queue', ts=now,
+                                rid=req.request_id,
+                                reason=self._SHED_REASONS.get(reason, reason),
+                                trace_id=req.effective_trace_id)
+        if self._user_on_shed is not None:
+            self._user_on_shed(reason, req, now)
+
+    def _slot_device(self, idx: int) -> Optional[int]:
+        """Mesh device carrying slot row ``idx`` (None single-device)."""
+        if self.mesh is None:
+            return None
+        return idx // self._slots_per_device
+
+    def _step_energy_j(self, precision: str, refresh: bool,
+                       guided: bool) -> float:
+        """Energy one slot consumes in one tick at (precision, refresh
+        kind) — the per-event delta step trace events carry.  Rides the
+        accountant's simulation cache, so per-tick cost is a dict hit."""
+        if self.photonic is None:
+            return 0.0
+        full, cached = (1, 0) if refresh else (0, 1)
+        energy_j, _ = self.photonic.energy_evals(full, cached, guided,
+                                                 precision=precision)
+        return energy_j
+
+    def _poll_straggler(self):
+        """Check the ``StepMonitor`` and, when its flagged-device set
+        CHANGES, emit a straggler trace event and fire ``on_straggler``
+        (edge-triggered so a persistent straggler doesn't refire every
+        tick).  Returns the current report (None when clean)."""
+        if self.monitor is None:
+            return None
+        report = self.monitor.check()
+        flagged = tuple(report.slow_hosts) if report is not None else ()
+        if flagged and flagged != self._straggler_flagged:
+            self.tracer.instant('straggler', cat='engine',
+                                slow_devices=list(flagged),
+                                median_s=report.median_s,
+                                threshold_s=report.threshold_s,
+                                recommendation=report.recommendation)
+            if self.on_straggler is not None:
+                self.on_straggler(report)
+        self._straggler_flagged = flagged
+        return report
+
     # -- request flow ------------------------------------------------------
     def submit(self, req: GenerationRequest,
                now: Optional[float] = None) -> bool:
         now = time.perf_counter() if now is None else now
-        evicted0 = getattr(self.queue, 'evicted', 0)
+        # sheds (rejected arrival / evicted entry) are recorded by the
+        # queue's on_shed hook with the specific victim request
         ok = self.queue.submit(req, now)
         if ok:
             self.metrics.record_submit(now)
-        else:
-            self.metrics.record_shed('queue_full')   # arrival turned away
-        if getattr(self.queue, 'evicted', 0) > evicted0:
-            # deadline-aware shed: a queued entry lost its place to this
-            # arrival because it had the least SLO slack
-            self.metrics.record_shed('deadline_evict')
+            if self.tracer.enabled:
+                self.tracer.instant('submit', cat='queue', ts=now,
+                                    rid=req.request_id,
+                                    steps=req.steps,
+                                    precision=req.precision,
+                                    trace_id=req.effective_trace_id)
         self.metrics.observe_queue_depth(len(self.queue))
         return ok
 
@@ -576,6 +671,11 @@ class ContinuousBatchingEngine:
         if a.cache_on:
             a.force_refresh = True
         self._slot[idx] = a
+        if self.tracer.enabled:
+            self.tracer.instant('unpark', cat='queue',
+                                rid=a.request.request_id, slot=idx,
+                                device=self._slot_device(idx),
+                                step_index=a.i)
 
     def _admit(self, now: float) -> None:
         # expire whenever ANY queued entry carries a deadline — the SLO
@@ -585,8 +685,8 @@ class ContinuousBatchingEngine:
         # service time: a request that would only FINISH past its
         # deadline is equally dead at admission time.
         if getattr(self.queue, 'has_deadlines', False):
-            for _ in self.queue.expire(now, margin_s=self._service_margin_s):
-                self.metrics.record_shed('expired')
+            # expired entries tally + trace through the queue's on_shed
+            self.queue.expire(now, margin_s=self._service_margin_s)
         # parked (resize-displaced) requests re-enter ahead of the queue;
         # force_refresh lets them rejoin mid-cadence (a mixed tick)
         for idx in range(self.slots):
@@ -622,6 +722,11 @@ class ContinuousBatchingEngine:
                 cache_on=self.cache_interval > 1 and interval > 1,
                 exit_tol=0.0 if tol is None else float(tol),
                 exit_patience=patience)
+            if self.tracer.enabled:
+                self.tracer.instant('slot_assign', cat='queue', ts=now,
+                                    rid=req.request_id, slot=idx,
+                                    device=self._slot_device(idx),
+                                    queue_wait_s=now - q.enqueue_time)
             noise = self._init_noise(jax.random.PRNGKey(req.seed))
             self.x = self._place(self.x, jnp.int32(idx), noise)
             # seed the x0 tracker with the slot's noise: the first delta
@@ -664,12 +769,24 @@ class ContinuousBatchingEngine:
         if self._decode is not None:
             z = self._decode(z)
         self._slot[idx] = None
+        if self.tracer.enabled:
+            if early:
+                self.tracer.instant('early_exit', cat='request', ts=now,
+                                    rid=a.request.request_id, slot=idx,
+                                    device=self._slot_device(idx),
+                                    steps_executed=a.i,
+                                    steps_requested=a.request.steps)
+            self.tracer.instant('decode_dispatch', cat='decode', ts=now,
+                                rid=a.request.request_id, slot=idx,
+                                device=self._slot_device(idx))
         return _Pending(active=a, z=z, now=now, wall_clock=wall_clock,
-                        early=early)
+                        early=early, slot=idx)
 
-    def _finish_drain(self, p: _Pending) -> GenerationResult:
+    def _finish_drain(self, p: _Pending,
+                      overlapped: bool = False) -> GenerationResult:
         """Materialize a dispatched drain: device sync, latency stamp,
-        energy + quality accounting, completion metrics."""
+        energy + quality accounting, completion metrics.  ``overlapped``
+        marks a decode that hid behind the following tick's UNet step."""
         a, z, now, wall_clock, early = (p.active, p.z, p.now,
                                         p.wall_clock, p.early)
         req = a.request
@@ -707,8 +824,28 @@ class ContinuousBatchingEngine:
             precision=req.precision, policy=pol,
             quality_psnr_db=psnr, quality_mse=mse,
             steps_executed=a.i, full_evals=a.full_evals,
-            cached_evals=a.cached_evals, early_exit=early)
+            cached_evals=a.cached_evals, early_exit=early,
+            trace_id=req.effective_trace_id)
         self.metrics.record_complete(res, slo_ms=req.slo_ms)
+        if self.tracer.enabled:
+            self.tracer.instant('decode_done', cat='decode', ts=now,
+                                rid=req.request_id, slot=p.slot,
+                                device=self._slot_device(p.slot),
+                                overlapped=overlapped)
+            # the request span is stamped from the RESULT's own timing
+            # fields, so trace latency == metrics latency exactly
+            self.tracer.complete(
+                'request', a.submit_time, now, cat='request',
+                rid=req.request_id, slot=p.slot,
+                device=self._slot_device(p.slot),
+                trace_id=res.trace_id, precision=req.precision,
+                steps_executed=a.i, full_evals=a.full_evals,
+                cached_evals=a.cached_evals, early_exit=early,
+                queue_wait_s=res.queue_delay_s, energy_j=energy_j,
+                slo_ms=req.slo_ms)
+            self.tracer.instant('complete', cat='request', ts=now,
+                                rid=req.request_id, slot=p.slot,
+                                latency_s=res.latency_s)
         return res
 
     def _flush_pending(self, overlapped: bool) -> List[GenerationResult]:
@@ -720,7 +857,8 @@ class ContinuousBatchingEngine:
         pending, self._pending = self._pending, []
         if overlapped:
             self.metrics.record_overlapped_decode(len(pending))
-        return [self._finish_drain(p) for p in pending]
+        return [self._finish_drain(p, overlapped=overlapped)
+                for p in pending]
 
     def tick(self, now: Optional[float] = None,
              wall_clock: Optional[bool] = None) -> List[GenerationResult]:
@@ -760,54 +898,57 @@ class ContinuousBatchingEngine:
                                   or refresh_tick or a.force_refresh)
             if a.exit_tol > 0.0 and a.i + 1 >= self.exit_min_steps:
                 track_exit = True
-        groups = group_by_precision(
+        plan = plan_tick(
             [a.request.precision if a is not None else None
-             for a in self._slot])
+             for a in self._slot],
+            needs_refresh, caching)
         tick_idx = self.metrics.ticks
         active_mask = np.zeros(self.slots, bool)
-        for m in groups.values():
+        for _, _, m in plan:
             active_mask |= m
         self.metrics.record_tick(
             int(active_mask.sum()),
             full_slots=int((active_mask & needs_refresh).sum()),
             cached_slots=int((active_mask & ~needs_refresh).sum()))
         had_cached = self._cached_active() > 0
-        # one pre-compiled masked step per (precision group, refresh|skip)
-        # submask; donated latent/x0/cache buffers chain call to call, so
-        # slots outside the running submask pass through untouched
+        # one pre-compiled masked step per plan entry — (precision group,
+        # refresh|skip) submask; donated latent/x0/cache buffers chain
+        # call to call, so slots outside the running submask pass through
+        # untouched
+        traced = self.tracer.enabled
         delta_parts = []
         t_d, tp_d = jnp.asarray(t), jnp.asarray(t_prev)
-        for pname in sorted(groups):
-            mask = groups[pname]
+        for pname, refresh, m in plan:
+            g = np.where(m, guidance, 0.0).astype(np.float32)
+            guided = self.context is not None and bool(g.any())
+            key = self._tick_key(self._policy_for(pname), tick_idx)
+            m_d, g_d = jnp.asarray(m), jnp.asarray(g)
+            t_step0 = self.tracer.now() if traced else 0.0
             if caching:
-                r_m, s_m = split_cache_phase(mask, needs_refresh)
-                pairs = ((True, r_m), (False, s_m))
-            else:
-                pairs = ((True, mask),)
-            for kind, m in pairs:
-                if not m.any():
-                    continue
-                g = np.where(m, guidance, 0.0).astype(np.float32)
-                guided = self.context is not None and bool(g.any())
-                key = self._tick_key(self._policy_for(pname), tick_idx)
-                m_d, g_d = jnp.asarray(m), jnp.asarray(g)
-                if caching:
-                    step_fn = self._get_cached_step(pname, guided,
-                                                    refresh=kind)
-                    if guided:
-                        (self.x, self.x0, d, self._cache_c,
-                         self._cache_u) = step_fn(
-                            self.x, self.x0, self._cache_c, self._cache_u,
-                            t_d, tp_d, m_d, g_d, key)
-                    else:
-                        self.x, self.x0, d, self._cache_c = step_fn(
-                            self.x, self.x0, self._cache_c,
-                            t_d, tp_d, m_d, g_d, key)
+                step_fn = self._get_cached_step(pname, guided,
+                                                refresh=refresh)
+                if guided:
+                    (self.x, self.x0, d, self._cache_c,
+                     self._cache_u) = step_fn(
+                        self.x, self.x0, self._cache_c, self._cache_u,
+                        t_d, tp_d, m_d, g_d, key)
                 else:
-                    step_fn = self._get_step(pname, guided)
-                    self.x, self.x0, d = step_fn(
-                        self.x, self.x0, t_d, tp_d, m_d, g_d, key)
-                delta_parts.append((m, d))
+                    self.x, self.x0, d, self._cache_c = step_fn(
+                        self.x, self.x0, self._cache_c,
+                        t_d, tp_d, m_d, g_d, key)
+            else:
+                step_fn = self._get_step(pname, guided)
+                self.x, self.x0, d = step_fn(
+                    self.x, self.x0, t_d, tp_d, m_d, g_d, key)
+            delta_parts.append((m, d))
+            if traced:
+                n_m = int(m.sum())
+                self.tracer.complete(
+                    'step', t_step0, self.tracer.now(), cat='tick',
+                    tick=tick_idx, precision=pname, refresh=refresh,
+                    guided=guided, slots=n_m,
+                    energy_j=self._step_energy_j(pname, refresh,
+                                                 guided) * n_m)
         # decode overlap: decodes dispatched LAST tick materialize now,
         # behind the UNet step(s) just launched above
         done: List[GenerationResult] = self._flush_pending(overlapped=True)
@@ -860,6 +1001,18 @@ class ContinuousBatchingEngine:
             dt = time.perf_counter() - t_tick0
             for dev in range(int(self.mesh.shape['data'])):
                 self.monitor.record(dev, dt)
+            self._poll_straggler()
+        if traced:
+            t1 = self.tracer.now()
+            self.tracer.complete(
+                'tick', t1 - (time.perf_counter() - t_tick0), t1,
+                cat='tick', tick=tick_idx,
+                active=int(active_mask.sum()), drained=len(done))
+            self.tracer.counter('occupancy', cat='engine', tick=tick_idx,
+                                active=self.active_count,
+                                queued=len(self.queue))
+        if self.reporter is not None:
+            self.reporter.maybe_report(engine=self)
         return done
 
     def run_until_idle(self, now: Optional[float] = None,
@@ -888,6 +1041,9 @@ class ContinuousBatchingEngine:
         by the caller; they do not pass through this return value)."""
         pending = sorted(requests, key=lambda r: r.arrival_time)
         t0 = self._wall_t0 = time.perf_counter()
+        # trace clock := replay serving clock, so trace timestamps and
+        # GenerationResult timing fields agree exactly
+        self.tracer.set_origin(t0)
         results: List[GenerationResult] = []
         for _ in range(max_ticks):
             now = time.perf_counter() - t0
@@ -964,7 +1120,11 @@ class ContinuousBatchingEngine:
         self._csteps.clear()
         self._build_helpers()
         self.monitor = StepMonitor(n_hosts=new_ndev)
+        self._straggler_flagged = ()
         self.metrics.record_resize(old_ndev, new_ndev)
+        self.tracer.instant('elastic_resize', cat='engine',
+                            old_devices=old_ndev, new_devices=new_ndev,
+                            slots=new_slots, parked=len(self._parked))
         for idx in range(self.slots):
             if not self._parked:
                 break
@@ -994,9 +1154,10 @@ class ContinuousBatchingEngine:
             enable_persistent_cache(cache_dir)
         t0 = time.perf_counter()
         saved_q, saved_m = self.queue, self.metrics
-        saved_probe = self.quality_probe
+        saved_probe, saved_tracer = self.quality_probe, self.tracer
         self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
         self.quality_probe = 0          # no fp32 references for throwaways
+        self.tracer = NULL_TRACER       # throwaways must not pollute traces
         # enough steps to cross a refresh boundary: compiles refresh+skip
         steps = 1 if self.cache_interval <= 1 else self.cache_interval + 1
         try:
@@ -1016,9 +1177,13 @@ class ContinuousBatchingEngine:
                     self.run_until_idle(now=0.0)
         finally:
             self.queue, self.metrics = saved_q, saved_m
-            self.quality_probe = saved_probe
+            self.quality_probe, self.tracer = saved_probe, saved_tracer
         dt = time.perf_counter() - t0
         self.metrics.record_warmup(dt)
+        if self.tracer.enabled:
+            t1 = self.tracer.now()
+            self.tracer.complete('warmup', t1 - dt, t1, cat='engine',
+                                 precisions=list(precisions), seconds=dt)
         trim_cache()    # enforce the persistent-cache size bound, if any
         return dt
 
@@ -1088,7 +1253,12 @@ class ContinuousBatchingEngine:
                                  jnp.float32)).compile()
             n += 1
         trim_cache()    # enforce the persistent-cache size bound, if any
-        return {'variants': n, 'seconds': time.perf_counter() - t0}
+        dt = time.perf_counter() - t0
+        if self.tracer.enabled:
+            t1 = self.tracer.now()
+            self.tracer.complete('aot_warmup', t1 - dt, t1, cat='engine',
+                                 variants=n, seconds=dt)
+        return {'variants': n, 'seconds': dt}
 
     def measure_tick_s(self, steps: int = 4) -> float:
         """Steady-state wall seconds per engine tick at full slot
@@ -1097,9 +1267,10 @@ class ContinuousBatchingEngine:
         ``slots / (steps * tick_s)`` requests/s.  Call after warmup so
         no compile time leaks into the measurement."""
         saved_q, saved_m = self.queue, self.metrics
-        saved_probe = self.quality_probe
+        saved_probe, saved_tracer = self.quality_probe, self.tracer
         self.queue, self.metrics = AdmissionQueue(), ServingMetrics()
         self.quality_probe = 0
+        self.tracer = NULL_TRACER       # throwaways must not pollute traces
         try:
             for i in range(self.slots):
                 self.submit(GenerationRequest(request_id=-(100 + i),
@@ -1111,6 +1282,6 @@ class ContinuousBatchingEngine:
             ticks = max(self.metrics.ticks, 1)
         finally:
             self.queue, self.metrics = saved_q, saved_m
-            self.quality_probe = saved_probe
+            self.quality_probe, self.tracer = saved_probe, saved_tracer
         self._tick_s = dt / ticks    # feeds the admission SLO margin
         return self._tick_s

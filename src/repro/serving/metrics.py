@@ -13,7 +13,7 @@ attributed the paper's Fig. 10 GPU digital baseline (EPB anchored at
 94.18x DiffLight, 32-bit operands), which is exactly the energy gap the
 per-request precision knob trades against quality.
 
-``ServingMetrics`` keeps the queue/latency ledger (p50/p95 latency,
+``ServingMetrics`` keeps the queue/latency ledger (p50/p95/p99 latency,
 p50/p99 queue wait, requests/s, tick/occupancy counters, SLO
 violations) plus the frontier: one ``FrontierPoint`` per completed
 request (precision, EPB, energy, PSNR/MSE vs the fp32 reference when
@@ -142,6 +142,7 @@ class MetricsSnapshot:
     queued: int
     p50_latency_s: float
     p95_latency_s: float
+    p99_latency_s: float
     requests_per_s: float
     total_energy_j: float
     slo_violations: int
@@ -198,6 +199,8 @@ class ServingMetrics:
         self.overlapped_decodes = 0
         self.results: List[GenerationResult] = []
         self.frontier_points: List[FrontierPoint] = []
+        self.latency_sum_s = 0.0      # summary _sum for the exposition
+        self.queue_wait_sum_s = 0.0
         self._latencies: List[float] = []       # kept sorted
         self._first_submit: Optional[float] = None
         self._last_finish: Optional[float] = None
@@ -272,6 +275,8 @@ class ServingMetrics:
         self.results.append(res)
         bisect.insort(self._latencies, res.latency_s)
         bisect.insort(self._queue_waits, res.queue_delay_s)
+        self.latency_sum_s += res.latency_s
+        self.queue_wait_sum_s += res.queue_delay_s
         self.total_energy_j += res.energy_j
         self._last_finish = res.finish_time if self._last_finish is None \
             else max(self._last_finish, res.finish_time)
@@ -380,6 +385,7 @@ class ServingMetrics:
             active_slots=active_slots, queued=queued,
             p50_latency_s=self.percentile_latency(50),
             p95_latency_s=self.percentile_latency(95),
+            p99_latency_s=self.percentile_latency(99),
             requests_per_s=self.requests_per_s(),
             total_energy_j=self.total_energy_j,
             slo_violations=self.slo_violations,
@@ -404,11 +410,12 @@ class ServingMetrics:
 
     def summary(self) -> Dict[str, float]:
         s = self.snapshot()
-        return {
+        out = {
             'completed': float(s.completed),
             'requests_per_s': s.requests_per_s,
             'p50_latency_ms': s.p50_latency_s * 1e3,
             'p95_latency_ms': s.p95_latency_s * 1e3,
+            'p99_latency_ms': s.p99_latency_s * 1e3,
             'total_energy_mj': s.total_energy_j * 1e3,
             'energy_per_request_mj': (s.total_energy_j * 1e3 /
                                       max(s.completed, 1)),
@@ -429,3 +436,8 @@ class ServingMetrics:
             'devices': float(s.devices),
             'overlapped_decodes': float(s.overlapped_decodes),
         }
+        # full shed breakdown, one key per cause — 'deadline_sheds'
+        # stays as the two-cause aggregate for backward compatibility
+        for reason, count in sorted(s.shed_by_reason.items()):
+            out[f'shed_{reason}'] = float(count)
+        return out

@@ -25,7 +25,11 @@ Two shedding policies govern what happens when the bound is hit:
 Shed accounting is split by cause: ``rejected`` (arrivals turned away at
 the bound), ``evicted`` (queued entries displaced by deadline-aware
 shedding) and ``expired`` (entries whose deadline passed while queued);
-``shed`` is their sum.
+``shed`` is their sum.  ``on_shed`` (constructor arg or assignable
+attribute) is the per-request observability hook: it fires as
+``on_shed(reason, request, now)`` for every shed, with the SPECIFIC
+request that was dropped — the engine wires it into its metrics and
+tracer so a shed is attributable to a request id, not just a counter.
 """
 from __future__ import annotations
 
@@ -52,12 +56,15 @@ class Queued:
 
 class AdmissionQueue:
     def __init__(self, max_depth: Optional[int] = None,
-                 shed_policy: str = 'reject-newest'):
+                 shed_policy: str = 'reject-newest',
+                 on_shed: Optional[Callable[
+                     [str, GenerationRequest, float], None]] = None):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f'unknown shed_policy {shed_policy!r} '
                              f'(expected one of {SHED_POLICIES})')
         self.max_depth = max_depth
         self.shed_policy = shed_policy
+        self.on_shed = on_shed        # (reason, request, now) per shed
         self._heap: List[Tuple[int, int, Queued]] = []
         self._seq = 0                 # FIFO tiebreak within a priority
         self.submitted = 0
@@ -86,6 +93,11 @@ class AdmissionQueue:
     def _deadline(req: GenerationRequest, now: float) -> float:
         return math.inf if req.slo_ms is None else now + req.slo_ms / 1e3
 
+    def _notify_shed(self, reason: str, req: GenerationRequest,
+                     now: float) -> None:
+        if self.on_shed is not None:
+            self.on_shed(reason, req, now)
+
     def submit(self, req: GenerationRequest, now: float = 0.0) -> bool:
         """Enqueue; returns False when the request was rejected.
 
@@ -101,14 +113,17 @@ class AdmissionQueue:
                                key=lambda i: (self._heap[i][2].deadline,
                                               -self._heap[i][1]))
                 if self._heap[victim_i][2].deadline < deadline:
-                    self._heap.pop(victim_i)
+                    victim = self._heap.pop(victim_i)[2]
                     heapq.heapify(self._heap)
                     self.evicted += 1
+                    self._notify_shed('evicted', victim.request, now)
                 else:
                     self.rejected += 1
+                    self._notify_shed('rejected', req, now)
                     return False
             else:
                 self.rejected += 1
+                self._notify_shed('rejected', req, now)
                 return False
         self._seq += 1
         heapq.heappush(self._heap, (-req.priority, self._seq,
@@ -153,7 +168,10 @@ class AdmissionQueue:
         self._heap = [e for e in self._heap if not dead_entry(e)]
         heapq.heapify(self._heap)
         self.expired += len(dead)
-        return [q for _, _, q in sorted(dead, key=lambda e: e[1])]
+        out = [q for _, _, q in sorted(dead, key=lambda e: e[1])]
+        for q in out:
+            self._notify_shed('expired', q.request, now)
+        return out
 
     def oldest_wait(self, now: float) -> float:
         """Age of the oldest queued request (0 when empty)."""
